@@ -1,0 +1,22 @@
+"""Shared benchmark plumbing: every paper table/figure is a module with
+``run() -> dict`` (printable rows + derived headline numbers)."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6  # µs
+
+
+def fmt_table(rows: list[dict], cols: list[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    line = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-+-".join("-" * widths[c] for c in cols)
+    body = "\n".join(" | ".join(str(r.get(c, "")).ljust(widths[c])
+                                for c in cols) for r in rows)
+    return f"{line}\n{sep}\n{body}"

@@ -1,0 +1,89 @@
+"""Fig. 1 — linear vs log quantization quality.
+
+The paper shows weight histograms for VGG16/SqueezeNet under 1.5-bit
+linear, 5.0-bit log (base 2) and 5.1-bit log (base √2), and reports VGG16
+top-1 dropping ≈3.5 pts under base-√2 vs ≈10 pts under base-2.
+
+No pretrained ImageNet weights exist offline, so we reproduce the claim in
+two forms (trend, not absolute top-1 — DESIGN.md §Known deviations):
+  1. quantization SNR of realistic (normal, heavy-tailed) weight tensors
+     under the three schemes;
+  2. logit fidelity of a real (random-init) VGG16 forward pass under
+     fake-quant: base-√2 must sit far closer to fp32 than base-2 / low-bit
+     linear.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.logquant import (LogQuantConfig, linear_quantize,
+                                 log_dequantize, log_quantize,
+                                 quantization_snr_db)
+from repro.models.cnn import make_cnn
+
+from .common import fmt_table
+
+SCHEMES = {
+    "linear Q1.2 (1.5b eff)": ("linear", dict(int_bits=2, frac_bits=2)),
+    "log base-2  (5.0b)": ("log", LogQuantConfig(frac_bits=0,
+                                                 per_channel=False)),
+    "log base-√2 (5.1b)": ("log", LogQuantConfig(frac_bits=1,
+                                                 per_channel=False)),
+}
+
+
+def _quantize(w, scheme):
+    kind, cfg = scheme
+    if kind == "linear":
+        scale = float(np.abs(w).max()) or 1.0
+        q = linear_quantize(jnp.asarray(w / scale), **cfg)
+        return np.asarray(q) * scale
+    packed, s = log_quantize(jnp.asarray(w), cfg)
+    return np.asarray(log_dequantize(packed, s, cfg))
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    rows = []
+    # 1 — SNR on weight-like tensors
+    dists = {
+        "normal*0.05": rng.normal(size=65536).astype(np.float32) * 0.05,
+        "laplace": rng.laplace(size=65536).astype(np.float32) * 0.03,
+    }
+    snr = {}
+    for name, scheme in SCHEMES.items():
+        row = {"scheme": name}
+        for dname, w in dists.items():
+            row[f"snr_{dname}_db"] = round(
+                float(quantization_snr_db(w, _quantize(w, scheme))), 2)
+        snr[name] = row[f"snr_normal*0.05_db"]
+        rows.append(row)
+
+    # 2 — logit fidelity through a real VGG16 forward
+    key = jax.random.PRNGKey(1)
+    params, apply_fp = make_cnn("vgg16", key, n_classes=100, width_mult=0.25)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 32, 32, 3))
+    ref = np.asarray(apply_fp(params, x)).ravel()
+
+    fidelity = {}
+    for name, scheme in SCHEMES.items():
+        qparams = jax.tree.map(
+            lambda w: jnp.asarray(_quantize(np.asarray(w), scheme))
+            if w.ndim >= 2 else w, params)
+        out = np.asarray(apply_fp(qparams, x)).ravel()
+        fidelity[name] = float(np.corrcoef(ref, out)[0, 1])
+
+    for row in rows:
+        row["vgg16_logit_corr"] = round(fidelity[row["scheme"]], 4)
+
+    print(fmt_table(rows, list(rows[0])))
+    s2, ss2 = snr["log base-2  (5.0b)"], snr["log base-√2 (5.1b)"]
+    ok = ss2 > s2 + 4.0 and \
+        fidelity["log base-√2 (5.1b)"] > fidelity["log base-2  (5.0b)"]
+    print(f"paper claim (base-√2 ≫ base-2): {'REPRODUCED' if ok else 'FAIL'}"
+          f"  (ΔSNR={ss2-s2:+.1f} dB)")
+    return {"rows": rows, "snr_gain_db": ss2 - s2,
+            "corr_sqrt2": fidelity["log base-√2 (5.1b)"], "ok": ok}

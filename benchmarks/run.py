@@ -1,0 +1,57 @@
+"""Run every paper table/figure benchmark.  One module per artifact.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig19_utilization ...]
+
+Prints each benchmark's table, then a ``name,us_per_call,derived`` CSV
+summary (derived = the headline number + REPRODUCED/FAIL verdict).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import (ablation_grad_compress, fig1_quant, fig17_pe_cost,
+               fig19_utilization, fig20_throughput, table2_comparison,
+               table3_latency)
+from .common import timed
+
+BENCHES = {
+    "fig1_quant": (fig1_quant, "snr_gain_db"),
+    "fig17_pe_cost": (fig17_pe_cost, "tput_per_pe"),
+    "fig19_utilization": (fig19_utilization, None),
+    "fig20_throughput": (fig20_throughput, "adjusted_pes"),
+    "table2_comparison": (table2_comparison, "peak_gops"),
+    "table3_latency": (table3_latency, "total_ms"),
+    "ablation_grad_compress": (ablation_grad_compress, "ef_gap"),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=list(BENCHES))
+    args = ap.parse_args(argv)
+    names = args.only or list(BENCHES)
+
+    summary = []
+    ok_all = True
+    for name in names:
+        mod, key = BENCHES[name]
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        out, us = timed(mod.run)
+        derived = f"{out.get(key):.4g}" if key and out.get(key) is not None \
+            else ("ok" if out.get("ok") else "fail")
+        verdict = "REPRODUCED" if out.get("ok") else "FAIL"
+        ok_all &= bool(out.get("ok"))
+        summary.append(f"{name},{us:.0f},{derived} [{verdict}]")
+
+    print("\nname,us_per_call,derived")
+    for line in summary:
+        print(line)
+    print(f"\noverall: "
+          f"{'ALL PAPER CLAIMS REPRODUCED' if ok_all else 'SOME FAILED'}")
+    return 0 if ok_all else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

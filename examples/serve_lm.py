@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine — mixed prompt lengths, temperature/greedy mix, slot
+refill, plus a correctness spot-check against naive decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import transformer
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+
+
+def main():
+    cfg = get_config("gemma3-1b").reduced(n_layers=4)  # local+global mix
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, EngineConfig(
+        max_batch=4, max_prompt=32, max_len=64))
+
+    rng = np.random.default_rng(0)
+    n_req = 10
+    for uid in range(n_req):
+        T = int(rng.integers(3, 16))
+        prompt = rng.integers(1, cfg.vocab, size=T).astype(np.int32)
+        engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=12,
+                              temperature=0.0 if uid % 2 else 0.8,
+                              seed=uid))
+
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"served {len(done)}/{n_req} requests, {toks} tokens in {dt:.1f}s"
+          f" ({toks/dt:.1f} tok/s incl. compile)  stats={engine.stats}")
+
+    # spot-check one greedy request against naive full-forward decode
+    req = next(r for r in done if r.temperature == 0.0)
+    toks_ref = list(req.prompt)
+    for _ in range(len(req.output)):
+        h, _, _ = transformer.forward(
+            params, jnp.asarray([toks_ref], jnp.int32), cfg)
+        logits = transformer.logits_fn(params, h[:, -1:], cfg)
+        toks_ref.append(int(jnp.argmax(logits[0, 0])))
+    ok = toks_ref[len(req.prompt):] == req.output
+    print(f"greedy request {req.uid} matches naive decode: {ok}")
+    assert ok
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro: NeuroMAX (log-quantized, multi-threaded dataflow) in JAX/Pallas.
+
+Subpackages:
+  core      paper's contribution: log quantization, log-PE math, PE grid +
+            2D weight-broadcast dataflow models
+  kernels   Pallas TPU kernels (log_matmul, flash_attention, wkv6) + oracles
+  models    transformer zoo (dense/GQA/MoE/RWKV6/RG-LRU) + CNN substrate
+  configs   assigned architectures
+  data      input pipeline
+  training  optimizers, grad compression, train loop
+  serving   KV-cache engine
+  runtime   checkpoint/restore, elastic resharding, monitoring
+  launch    mesh, dry-run, train/serve drivers
+  analysis  roofline
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,114 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+records.
+
+    PYTHONPATH=src python -m repro.analysis.report --dir results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import defaultdict
+
+from ..configs.base import SHAPES
+from ..configs.registry import ARCH_NAMES
+from .roofline import from_record, load_records
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    """One row per (arch, shape): single- and multi-pod status + memory."""
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in recs}
+    lines = [
+        "| arch | shape | step | 1-pod (256c) | GiB/dev | 2-pod (512c) | "
+        "GiB/dev | collectives (1-pod, per unit-iter) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            s = by_key.get((arch, shape, "single"))
+            m = by_key.get((arch, shape, "multi"))
+            if s is None:
+                continue
+            if s.get("skipped"):
+                lines.append(f"| {arch} | {shape} | — | skipped "
+                             f"(full-attention @500k) | | skipped | | |")
+                continue
+
+            def fmt(r):
+                if r is None:
+                    return "—", ""
+                if "error" in r:
+                    return "FAIL", ""
+                mem = (r["memory"]["temp_bytes"]
+                       + r["memory"]["argument_bytes"]) / 2**30
+                return "ok", f"{mem:.1f}"
+
+            s_st, s_mem = fmt(s)
+            m_st, m_mem = fmt(m)
+            cc = s.get("collectives_prod_once", {}).get("counts", {})
+            cstr = " ".join(f"{k.split('-')[-1][:4]}:{v}"
+                            for k, v in sorted(cc.items()))
+            lines.append(f"| {arch} | {shape} | {s.get('step_kind','')} "
+                         f"| {s_st} | {s_mem} | {m_st} | {m_mem} | {cstr} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+        "useful | roofline-MFU | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if rec.get("mesh") != "single" or rec.get("skipped") \
+                or "cost_true" not in rec:
+            continue
+        r = from_record(rec)
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.t_compute*1e3:.2f} "
+            f"| {r.t_memory*1e3:.2f} | {r.t_collective*1e3:.2f} "
+            f"| {r.bottleneck[:4]} | {r.useful_flops_ratio:.2f} "
+            f"| {r.mfu*100:.1f}% | {r.memory_per_dev/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def summary(recs: list[dict]) -> str:
+    n_ok = sum(1 for r in recs if "error" not in r and not r.get("skipped"))
+    n_skip = sum(1 for r in recs if r.get("skipped"))
+    n_fail = sum(1 for r in recs if "error" in r)
+    bounds = defaultdict(int)
+    worst = []
+    for rec in recs:
+        if rec.get("mesh") != "single" or rec.get("skipped") \
+                or "cost_true" not in rec:
+            continue
+        r = from_record(rec)
+        bounds[r.bottleneck] += 1
+        worst.append((r.mfu, f"{r.arch}/{r.shape}"))
+    worst.sort()
+    out = [f"- {n_ok} compiled ok, {n_skip} skipped (per assignment), "
+           f"{n_fail} failed",
+           f"- bottleneck split: {dict(bounds)}",
+           f"- lowest roofline-MFU cells: "
+           + ", ".join(f"{n} ({m*100:.1f}%)" for m, n in worst[:3])]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    text = ("## §Dry-run\n\n" + summary(recs) + "\n\n"
+            + dryrun_table(recs) + "\n\n## §Roofline (single-pod, 256 chips)"
+            + "\n\n" + roofline_table(recs) + "\n")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

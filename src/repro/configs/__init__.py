@@ -1,0 +1,2 @@
+from .base import SHAPES, SUBQUADRATIC, ModelConfig, cell_is_runnable
+from .registry import ARCH_NAMES, REGISTRY, get_config

@@ -1,0 +1,82 @@
+"""Bit-exact fixed-point semantics of the NeuroMAX log-PE compute thread.
+
+Implements eqs. (5)-(8):
+
+    w_q · a_q = sign(w_q) · 2^(g'),        g' = w' + a'            (5,6)
+              = sign(w_q) · 2^INT(g) · 2^FRAC(g),  g = g'/2^n      (7)
+              = sign(w_q) · (LUT(FRAC(g')) >> ¬INT(g'))            (8)
+
+where w', a' are integer log codes in 1/2^n-octave units.  The LUT holds the
+2^n fractional powers 2^(f/2^n) as fixed-point integers with F fractional
+bits; the shift realises the integer part of the exponent.  This module is
+the *oracle* for the hardware: `tests/test_logmath.py` proves the LUT+shift
+path equals the closed form, and `core/pe_grid.py` uses it so the grid model
+computes exactly what the RTL would.
+
+Everything here is plain numpy on small ints — it models hardware words, not
+tensors (the vectorised tensor path lives in `core/logquant.py` and
+`kernels/log_matmul.py`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["LogPEThread", "log_product_fixed", "make_frac_lut"]
+
+
+def make_frac_lut(frac_bits: int, out_frac_bits: int) -> np.ndarray:
+    """The pre-computed fractional table stored in each thread (2^n entries).
+
+    Paper: "we have n = 1 and thus store 2^n = 2 values in the thread memory."
+    Entry f holds round(2^(f / 2^n) · 2^F) for f in [0, 2^n).
+    """
+    steps = 1 << frac_bits
+    return np.array(
+        [int(round((2.0 ** (f / steps)) * (1 << out_frac_bits))) for f in range(steps)],
+        dtype=np.int64,
+    )
+
+
+def log_product_fixed(w_code: int, a_code: int, w_sign: int,
+                      frac_bits: int = 1, out_frac_bits: int = 12) -> int:
+    """Eq. (8): one thread's product as a fixed-point integer (F frac bits).
+
+    w_code, a_code : integer log codes in 1/2^n-octave units (may be negative)
+    w_sign         : ±1 (the paper's w'[6]; activations are post-ReLU ≥ 0)
+    returns        : integer v such that the real value is v / 2^F
+    """
+    steps = 1 << frac_bits
+    lut = make_frac_lut(frac_bits, out_frac_bits)
+    g = int(w_code) + int(a_code)                       # eq. (6), integer add
+    int_part = g >> frac_bits                           # floor(g / 2^n)
+    frac_part = g & (steps - 1)                         # g mod 2^n  (≥ 0)
+    v = int(lut[frac_part])
+    if int_part >= 0:
+        v <<= int_part                                  # 2^INT, left shift
+    else:
+        v >>= -int_part                                 # ">> ¬INT" of eq. (8)
+    return int(w_sign) * v
+
+
+class LogPEThread:
+    """One compute thread of a PE (Fig. 3a): code adder + LUT + barrel shift."""
+
+    def __init__(self, frac_bits: int = 1, out_frac_bits: int = 12):
+        self.frac_bits = frac_bits
+        self.out_frac_bits = out_frac_bits
+        self.lut = make_frac_lut(frac_bits, out_frac_bits)
+
+    def __call__(self, w_code, a_code, w_sign=1, a_nonzero=True, w_nonzero=True):
+        if not (a_nonzero and w_nonzero):
+            return 0
+        return log_product_fixed(w_code, a_code, w_sign,
+                                 self.frac_bits, self.out_frac_bits)
+
+    def to_float(self, v: int) -> float:
+        return v / float(1 << self.out_frac_bits)
+
+    def closed_form(self, w_code, a_code, w_sign=1) -> float:
+        """sign · 2^((w'+a')/2^n) — what eq. (5) says the product should be."""
+        steps = 1 << self.frac_bits
+        return w_sign * 2.0 ** ((w_code + a_code) / steps)

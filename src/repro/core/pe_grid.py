@@ -1,0 +1,266 @@
+"""Functional model of the NeuroMAX 6×3×6 PE grid + adder nets (§4-5).
+
+This computes *real convolution outputs* the way the RTL does, so the wiring
+(2D weight broadcast, adder-net-0 row reduction, adder-net-1 column combine,
+variable-length shift-register boundary psums) is testable against a dense
+convolution oracle.
+
+Grid geometry (Fig. 2/3):
+    6 PE matrices × (6 rows × 3 cols) PEs × 3 threads  = 324 threads.
+For a 3×3 conv, one matrix processes one input channel:
+  * a 6-row × 3-col input window (row-shifted per Fig. 6) enters the matrix;
+  * the 3×3 weight *matrix* is broadcast: PE column c holds weight row c,
+    its 3 threads multiply one input pixel by the 3 weights of that row;
+  * adder-net-0 (Fig. 4) sums same-coloured products along each PE row,
+    producing 18 psums o_{r,k} = Σ_dc x[r, j+dc]·w[k, dc]  (r∈0..5, k∈0..2);
+  * adder-net-1 (Fig. 9) combines psums across rows into outputs
+        y[r, j] = o_{r,0} + o_{r+1,1} + o_{r+2,2};
+    rows 4,5 of a band need psums from the *next* band — exactly the three
+    boundary psums (o13, o17, o16) the paper passes through the VAR-len SR.
+
+Two compute modes:
+  * mode="float": thread product = w·a in fp (isolates the dataflow wiring —
+    bit-exact against a direct convolution);
+  * mode="log":   thread product = the fixed-point LUT+shift of
+    `core.logmath.log_product_fixed` on log-quantized codes (bit-exact
+    against what the FPGA would produce).
+
+This model is intentionally plain numpy: it models hardware, not tensors.
+The TPU-native realisation of the same dataflow idea is
+`kernels/log_matmul.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .logmath import LogPEThread
+from .logquant import LogQuantConfig
+
+N_MATRICES = 6
+PE_ROWS = 6
+PE_COLS = 3
+THREADS = 3
+TOTAL_THREADS = N_MATRICES * PE_ROWS * PE_COLS * THREADS  # 324
+
+
+@dataclasses.dataclass
+class GridStats:
+    cycles: int = 0
+    useful_macs: int = 0
+    stored_psums: int = 0
+    total_psums: int = 0
+    active_thread_cycles: int = 0  # threads of matrices that held data
+
+    @property
+    def utilization(self) -> float:
+        """Whole-grid utilization (idle matrices count — Fig 19 semantics)."""
+        if self.cycles == 0:
+            return 0.0
+        return self.useful_macs / (self.cycles * TOTAL_THREADS)
+
+    @property
+    def active_utilization(self) -> float:
+        """Utilization w.r.t. matrices actually loaded (§5.1/§5.2 examples)."""
+        if self.active_thread_cycles == 0:
+            return 0.0
+        return self.useful_macs / self.active_thread_cycles
+
+    @property
+    def psum_storage_fraction(self) -> float:
+        if self.total_psums == 0:
+            return 0.0
+        return self.stored_psums / self.total_psums
+
+
+class PEMatrix:
+    """One 6×3 PE matrix + its adder-net-0: emits 18 psums per cycle."""
+
+    def __init__(self, mode: str = "float", thread: LogPEThread | None = None):
+        self.mode = mode
+        self.thread = thread or LogPEThread()
+
+    def cycle_psums(self, window: np.ndarray, w: np.ndarray,
+                    window_codes=None, w_codes=None, w_signs=None):
+        """window: [6, 3] input pixels (cols j..j+2); w: [3, 3] weight rows.
+
+        Returns psums o[r, k] = Σ_dc window[r, dc] · w[k, dc]   — shape [6, 3].
+        In log mode the per-thread products use the fixed-point LUT+shift and
+        the psums are integer accumulations (adder-net-0 is a plain adder).
+        """
+        if self.mode == "float":
+            # p_{r, k*3+dc} = window[r, dc] * w[k, dc]; adder-net-0 row sum
+            return np.einsum("rd,kd->rk", window, w)
+        # log mode: integer fixed-point accumulate
+        out = np.zeros((PE_ROWS, PE_COLS), dtype=np.int64)
+        for r in range(PE_ROWS):
+            for k in range(PE_COLS):
+                acc = 0
+                for dc in range(PE_COLS):
+                    acc += self.thread(
+                        int(w_codes[k, dc]), int(window_codes[r, dc]),
+                        int(w_signs[k, dc]),
+                        a_nonzero=window[r, dc] != 0,
+                        w_nonzero=w[k, dc] != 0,
+                    )
+                out[r, k] = acc
+        return out
+
+
+class PEGrid:
+    """The full 6-matrix grid with adder-net-1 + boundary shift registers."""
+
+    def __init__(self, mode: str = "float",
+                 quant_cfg: LogQuantConfig | None = None,
+                 out_frac_bits: int = 12):
+        self.mode = mode
+        self.quant_cfg = quant_cfg or LogQuantConfig(per_channel=False)
+        self.thread = LogPEThread(self.quant_cfg.frac_bits, out_frac_bits)
+        self.matrix = PEMatrix(mode, self.thread)
+
+    # -- log-domain helpers (host-side state-controller work) ---------------
+    def _codes(self, x):
+        """Host-side log quantization of a tensor → (codes, signs, deq)."""
+        import jax.numpy as jnp
+        from .logquant import log_quantize, unpack, log_dequantize
+        packed, scale = log_quantize(jnp.asarray(x, jnp.float32), self.quant_cfg)
+        code, sign, nz = unpack(packed, self.quant_cfg)
+        deq = log_dequantize(packed, scale, self.quant_cfg)
+        return (np.asarray(code), np.asarray(sign), np.asarray(nz),
+                float(np.asarray(scale).reshape(-1)[0]), np.asarray(deq))
+
+    # ------------------------------------------------------------------
+    def conv2d(self, x: np.ndarray, w: np.ndarray, stride: int = 1):
+        """x: [H, W, C]; w: [3, 3, C, P] (kh, kw, cin, cout). Valid padding.
+
+        Returns (y [H_out, W_out, P], GridStats).  Channels are assigned to
+        matrices 6-at-a-time (channel groups), filters iterate over passes,
+        psums are channel-accumulated (Fig. 13) before adder-net-1.
+        """
+        assert w.shape[0] == 3 and w.shape[1] == 3, "PE grid conv is 3x3"
+        H, W, C = x.shape
+        P = w.shape[3]
+        Ho = (H - 3) // stride + 1
+        Wo = (W - 3) // stride + 1
+        n_bands = int(np.ceil(H / PE_ROWS))
+        n_pos = W - 2  # column positions per band (stride handled at net-1)
+        pos_step = stride
+
+        if self.mode == "log":
+            xc, xs, xnz, xscale, xdq = self._codes(x)
+            wc, ws, wnz, wscale, wdq = self._codes(w)
+        stats = GridStats()
+        y = np.zeros((Ho, Wo, P), dtype=np.float64)
+
+        n_cgroups = int(np.ceil(C / N_MATRICES))
+        for p in range(P):
+            for cg in range(n_cgroups):
+                ch0 = cg * N_MATRICES
+                chans = list(range(ch0, min(ch0 + N_MATRICES, C)))
+                # boundary psum store: per output column j, the 3 psums
+                # (o_{4,0}, o_{5,0}, o_{5,1}) of the previous band (VAR-len SR)
+                sr = {}
+                for b in range(n_bands):
+                    r0 = b * PE_ROWS
+                    for j in range(0, n_pos, pos_step):
+                        # channel-accumulated 18 psums for this (band, j)
+                        o = np.zeros((PE_ROWS, PE_COLS), dtype=np.float64)
+                        for c in chans:
+                            win = np.zeros((PE_ROWS, PE_COLS))
+                            rows = min(PE_ROWS, H - r0)
+                            win[:rows] = x[r0:r0 + rows, j:j + 3, c]
+                            if self.mode == "float":
+                                o += self.matrix.cycle_psums(win, w[:, :, c, p])
+                            else:
+                                wcodes = wc[:, :, c, p]
+                                wsigns = ws[:, :, c, p]
+                                xcodes = np.zeros((PE_ROWS, PE_COLS), np.int64)
+                                xcodes[:rows] = xc[r0:r0 + rows, j:j + 3, c]
+                                o_fx = self.matrix.cycle_psums(
+                                    win, w[:, :, c, p],
+                                    window_codes=xcodes, w_codes=wcodes,
+                                    w_signs=wsigns)
+                                o += o_fx / float(1 << self.thread.out_frac_bits) \
+                                    * xscale * wscale
+                        stats.cycles += 1
+                        stats.total_psums += 18
+                        stats.active_thread_cycles += \
+                            PE_ROWS * PE_COLS * THREADS * len(chans)
+                        # adder-net-1: y[r] = o[r,0] + o[r+1,1] + o[r+2,2]
+                        for r in range(PE_ROWS - 2):  # rows 0..3 direct
+                            ro = r0 + r
+                            if ro % stride or ro // stride >= Ho or \
+                               j % stride or j // stride >= Wo:
+                                continue
+                            val = o[r, 0] + o[r + 1, 1] + o[r + 2, 2]
+                            y[ro // stride, j // stride, p] += val
+                            stats.useful_macs += 9 * len(chans)
+                        # boundary rows 4,5 need next band: store 3 psums
+                        if r0 + PE_ROWS < H:
+                            sr[(b, j)] = (o[4, 0], o[5, 0], o[5, 1])
+                            stats.stored_psums += 3
+                        # combine previous band's SR with this band's o[0..1]
+                        if b > 0 and (b - 1, j) in sr:
+                            o40, o50, o51 = sr.pop((b - 1, j))
+                            for ro, val in (
+                                (r0 - 2, o40 + o51 + o[0, 2]),       # row r0-2
+                                (r0 - 1, o50 + o[0, 1] + o[1, 2]),   # row r0-1
+                            ):
+                                if ro % stride or ro // stride >= Ho or \
+                                   j % stride or j // stride >= Wo:
+                                    continue
+                                y[ro // stride, j // stride, p] += val
+                                stats.useful_macs += 9 * len(chans)
+        return y.astype(np.float32), stats
+
+    # ------------------------------------------------------------------
+    def conv2d_1x1(self, x: np.ndarray, w: np.ndarray):
+        """x: [H, W, C]; w: [C, P].  Channel-parallel mapping of §5.2:
+
+        each matrix takes 3 channels (one per thread), 18 pixel slots per
+        cycle, channel accumulation across matrices (Fig. 13)."""
+        H, W, C = x.shape
+        P = w.shape[1]
+        stats = GridStats()
+        if self.mode == "log":
+            xc, xs, xnz, xscale, xdq = self._codes(x)
+            wc, ws, wnz, wscale, wdq = self._codes(w)
+            x_eff = None
+        pix = x.reshape(H * W, C)
+        y = np.zeros((H * W, P), dtype=np.float64)
+        ch_per_group = N_MATRICES * THREADS  # 18 channels in flight
+        n_cgroups = int(np.ceil(C / ch_per_group))
+        n_ptiles = int(np.ceil(H * W / (PE_ROWS * PE_COLS)))  # 18 pixels/cycle
+        for p in range(P):
+            for cg in range(n_cgroups):
+                c0 = cg * ch_per_group
+                c1 = min(c0 + ch_per_group, C)
+                for t in range(n_ptiles):
+                    i0, i1 = t * 18, min((t + 1) * 18, H * W)
+                    if self.mode == "float":
+                        y[i0:i1, p] += pix[i0:i1, c0:c1] @ w[c0:c1, p]
+                    else:
+                        F = 1 << self.thread.out_frac_bits
+                        acc = np.zeros(i1 - i0, dtype=np.float64)
+                        wcf = wc.reshape(C, P)
+                        wsf = ws.reshape(C, P)
+                        xcf = xc.reshape(H * W, C)
+                        for c in range(c0, c1):
+                            prods = np.array([
+                                self.thread(int(wcf[c, p]), int(xcf[i, c]),
+                                            int(wsf[c, p]),
+                                            a_nonzero=pix[i, c] != 0,
+                                            w_nonzero=w[c, p] != 0)
+                                for i in range(i0, i1)], dtype=np.float64)
+                            acc += prods / F * xscale * wscale
+                        y[i0:i1, p] += acc
+                    stats.cycles += 1
+                    stats.useful_macs += (i1 - i0) * (c1 - c0)
+                    stats.total_psums += 18
+                    # a matrix holds 3 channels × 18 pixel slots
+                    stats.active_thread_cycles += \
+                        PE_ROWS * PE_COLS * THREADS * \
+                        int(np.ceil((c1 - c0) / THREADS))
+        return y.reshape(H, W, P).astype(np.float32), stats

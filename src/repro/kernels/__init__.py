@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical hot spots + pure-jnp oracles.
+
+log_matmul       decode 6-bit log codes in VMEM → MXU dot (NeuroMAX PE path)
+flash_attention  blockwise online-softmax attention (causal / window / GQA)
+wkv6             chunked RWKV6 WKV scan with data-dependent decay
+"""
+from . import ops, ref
+from .ops import attention, log_matmul, wkv6

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: blockwise online-softmax attention (causal / window).
+
+Perf-critical hot spot for the prefill_32k / long-context cells: a full
+[Tq, Tk] score matrix at 32k² is ~4 GB per head in fp32 — blockwise online
+softmax keeps the working set at (bq × bk) in VMEM.  Supports GQA (the
+wrapper maps kv heads), causal masking, and sliding windows (gemma3 local
+layers, RecurrentGemma local attention).
+
+Grid: (batch·heads, q_blocks, kv_blocks), kv innermost ("arbitrary"
+semantics) with running (m, l, acc) scratch carried across kv steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, causal, window, block_q, block_k, q_offset, kv_len):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    qpos = (pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset)
+    kpos = (kv * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1))
+    mask = kpos < kv_len  # padded kv columns never contribute
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (exp(NEG_INF - NEG_INF) would be 1)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv == pl.num_programs(2) - 1)
+    def _flush():
+        l = jnp.where(l_ref[...] > 0, l_ref[...], 1.0)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret", "scale",
+                                             "q_offset"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
+                           q_offset=0, block_q=128, block_k=128,
+                           interpret=False):
+    """q: [BH, Tq, D]; k, v: [BH, Tk, D] (GQA mapping done by the wrapper).
+
+    Tq/Tk are padded to block multiples; padded kv columns are masked by
+    position (kpos > real positions are never unmasked because causal/window
+    masks use real positions and padded q rows are sliced off)."""
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    pq, pk = (-Tq) % block_q, (-Tk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    Tqp, Tkp = Tq + pq, Tk + pk
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset, kv_len=Tk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, Tqp // block_q, Tkp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(qp, kp, vp)
+    return out[:, :Tq]

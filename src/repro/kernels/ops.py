@@ -1,0 +1,201 @@
+"""Jit'd public wrappers around the Pallas kernels, with pure-jnp fallbacks.
+
+Dispatch policy (`impl=`):
+  "pallas"    — the Pallas kernel (TPU; `interpret=True` executes on CPU)
+  "blockwise" — pure-jnp blockwise/chunked math (same memory behaviour under
+                XLA; this is what model lowering uses on every backend)
+  "ref"       — full-materialisation oracle (small shapes / tests)
+  "auto"      — pallas on TPU, blockwise elsewhere
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.logquant import LogQuantConfig, QuantizedTensor
+from . import ref as _ref
+from .flash_attention import flash_attention_pallas
+from .log_matmul import log_matmul_pallas
+from .wkv6 import wkv6_chunked_jnp, wkv6_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "blockwise"
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# log_matmul
+# ---------------------------------------------------------------------------
+
+
+def log_matmul(x, qt: QuantizedTensor, *, impl: str = "auto",
+               interpret: bool | None = None):
+    """x: [..., K] @ dequant(qt [K, N]) → [..., N]."""
+    impl = _resolve(impl)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    scale = jnp.broadcast_to(jnp.asarray(qt.scale, jnp.float32),
+                             (1, qt.packed.shape[-1]))
+    if impl == "pallas":
+        interp = (not _on_tpu()) if interpret is None else interpret
+        out = log_matmul_pallas(x2, qt.packed, scale, qt.cfg,
+                                interpret=interp, out_dtype=x.dtype)
+    else:
+        # blockwise == ref for a matmul: XLA fuses decode into the dot's
+        # operand; weight bytes moved stay int8.
+        out = _ref.ref_log_matmul(x2, qt.packed, scale, qt.cfg,
+                                  out_dtype=x.dtype)
+    return out.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _blockwise_attention(q, k, v, *, causal, window, scale, q_offset,
+                         k_offset=0, block_k: int = 1024,
+                         acc_dtype=jnp.float32, gqa_broadcast: bool = False):
+    """Online-softmax over kv blocks with lax.scan — O(Tq·bk) live memory.
+
+    q: [B, Tq, H, D]; k, v: [B, Tk, Hkv, D].
+
+    §Perf knobs: `acc_dtype` runs the score/accumulator math in bf16
+    (running max/sum stay f32 for stability); `gqa_broadcast` reshapes q to
+    [B,Tq,Hkv,rep,D] and contracts against unexpanded K/V instead of
+    materialising rep× repeated K/V blocks."""
+    B, Tq, H, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    f32 = jnp.float32
+    cdt = acc_dtype
+
+    pk = (-Tk) % block_k
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nkv = (Tk + pk) // block_k
+    # [nkv, B, bk, Hkv, D]
+    kc = kp.reshape(B, nkv, block_k, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nkv, block_k, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    use_bcast = gqa_broadcast and rep > 1
+    qf = (q.astype(cdt) * jnp.asarray(scale, cdt))
+    if use_bcast:
+        qf = qf.reshape(B, Tq, Hkv, rep, D)
+    qpos = jnp.arange(Tq) + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry                 # [B,H,Tq,1], [B,H,Tq,1], [B,H,Tq,D]
+        kb, vb, kv_idx = inp
+        if use_bcast:
+            # s: [B, Hkv, rep, Tq, bk] without expanding K
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kb.astype(cdt))
+            s = s.reshape(B, H, Tq, block_k)
+        else:
+            if rep > 1:
+                kb = jnp.repeat(kb, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(cdt))
+        s = s.astype(f32)
+        kpos = kv_idx * block_k + jnp.arange(block_k) + k_offset
+        mask = (kpos[None, :] < Tk + k_offset) & (kpos[None, :] >= 0)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        if use_bcast:
+            pv = jnp.einsum("bhrqk,bkhd->bqhrd",
+                            p.reshape(B, Hkv, rep, Tq, block_k).astype(cdt),
+                            vb.astype(cdt))
+            pv = pv.reshape(B, Tq, H, D).transpose(0, 2, 1, 3)
+        else:
+            vb_ = jnp.repeat(vb, rep, axis=2) if rep > 1 else vb
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(cdt),
+                            vb_.astype(cdt))
+        acc = alpha * acc + pv.astype(f32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, H, Tq, 1), -1e30, f32),
+            jnp.zeros((B, H, Tq, 1), f32),
+            jnp.zeros((B, H, Tq, D), f32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (kc, vc, jnp.arange(nkv)))
+    out = acc / jnp.where(l > 0, l, 1.0)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale=None, q_offset: int = 0, k_offset=0, impl: str = "auto",
+              block_k: int = 1024, interpret: bool | None = None,
+              acc_dtype=jnp.float32, gqa_broadcast: bool = False):
+    """GQA attention.  q: [B, Tq, H, D]; k, v: [B, Tk, Hkv, D].
+
+    q_offset/k_offset may be traced scalars (decode); the Pallas path
+    requires static offsets, so dynamic-offset calls dispatch to blockwise.
+    """
+    impl = _resolve(impl)
+    dynamic = not (isinstance(q_offset, int) and isinstance(k_offset, int))
+    if impl == "pallas" and (dynamic or k_offset != 0):
+        impl = "blockwise"
+    if impl == "ref":
+        return _ref.ref_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset,
+                                  k_offset=k_offset)
+    if impl == "blockwise":
+        return _blockwise_attention(q, k, v, causal=causal, window=window,
+                                    scale=scale, q_offset=q_offset,
+                                    k_offset=k_offset, block_k=block_k,
+                                    acc_dtype=acc_dtype,
+                                    gqa_broadcast=gqa_broadcast)
+    # pallas: fold GQA + batch into BH
+    B, Tq, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qq = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, D)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vv = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    bq = min(128, max(16, Tq))
+    out = flash_attention_pallas(qq, kk, vv, causal=causal, window=window,
+                                 scale=scale, q_offset=q_offset,
+                                 block_q=bq, block_k=min(128, kk.shape[1]),
+                                 interpret=interp)
+    return out.reshape(B, H, Tq, D).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+
+def wkv6(r, k, v, logw, u, state=None, *, impl: str = "auto", chunk: int = 64,
+         interpret: bool | None = None):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_wkv6(r, k, v, logw, u, state)
+    if impl == "blockwise":
+        return wkv6_chunked_jnp(r, k, v, logw, u, state, chunk=chunk)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return wkv6_pallas(r, k, v, logw, u, state, chunk=chunk, interpret=interp)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the `tests/test_kernels_*.py` allclose sweeps
+(kernels run with interpret=True on CPU) and double as readable specs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.logquant import LogQuantConfig, log_dequantize
+
+# ---------------------------------------------------------------------------
+# log_matmul: x @ dequant(packed codes)  — the NeuroMAX decode-at-the-PE path
+# ---------------------------------------------------------------------------
+
+
+def ref_log_matmul(x, packed, scale, cfg: LogQuantConfig = LogQuantConfig(),
+                   out_dtype=None):
+    """x: [M, K] float; packed: [K, N] int8 log codes; scale: [1, N] or scalar."""
+    w = log_dequantize(packed, scale, cfg, dtype=jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST)
+    return out.astype(out_dtype or x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (causal / sliding-window), full-softmax reference
+# ---------------------------------------------------------------------------
+
+
+def ref_attention(q, k, v, *, causal=True, window=None, scale=None,
+                  q_offset=0, k_offset=0):
+    """q: [B, Tq, H, D]; k, v: [B, Tk, Hkv, D] (GQA: H multiple of Hkv).
+
+    window: sliding-window size (keys with q_pos - k_pos >= window masked).
+    q_offset: absolute position of q[0] (for decode: q_offset = Tk - Tq).
+    k_offset: absolute position of k[0] (ring-buffer caches; keys with
+    absolute position < 0 are masked as never-written slots).
+    """
+    B, Tq, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Tq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :] + k_offset
+    mask = kpos >= 0
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) WKV with data-dependent decay — sequential reference
+# ---------------------------------------------------------------------------
+
+
+def ref_wkv6(r, k, v, logw, u, state=None):
+    """Sequential WKV6 recurrence (the spec).
+
+    r, k: [B, T, H, K]; v: [B, T, H, V]; logw: [B, T, H, K] (log decay ≤ 0,
+    data-dependent — 'Finch'); u: [H, K] bonus for the current token.
+
+        o_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (o: [B, T, H, V], S_T: [B, H, K, V]).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    r, k, v, logw = (a.astype(f32) for a in (r, k, v, logw))
+    u = u.astype(f32)
+    if state is None:
+        state = jnp.zeros((B, H, K, V), f32)
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp  # [B,H,K],[B,H,K],[B,H,V],[B,H,K]
+        kv = kt[..., :, None] * vt[..., None, :]             # [B,H,K,V]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, o
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(logw, 1, 0))
+    S, o = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(o, 0, 1), S
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) — sequential reference
+# ---------------------------------------------------------------------------
+
+
+def ref_rglru(x, gate_a, state=None, c: float = 8.0):
+    """h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ x_t,  a_t = exp(c·log σ… )
+
+    x: [B, T, D] (already input-gated); gate_a: [B, T, D] the recurrence gate
+    *pre-activation combined with Λ*: a_t = exp(-c · softplus(Λ) · σ(g)) is
+    computed by the caller; here gate_a IS log(a_t) ≤ 0 for testability.
+    """
+    f32 = jnp.float32
+    x, gate_a = x.astype(f32), gate_a.astype(f32)
+    B, T, D = x.shape
+    if state is None:
+        state = jnp.zeros((B, D), f32)
+    a = jnp.exp(gate_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0))
+
+    def step(h, inp):
+        at, xt, mt = inp
+        h = at * h + mt * xt
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x, 1, 0),
+          jnp.moveaxis(mult, 1, 0))
+    hT, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), hT

@@ -1,0 +1,160 @@
+"""Step builders shared by dryrun/train/serve: the jitted programs plus
+their (abstract inputs, shardings) for a given (arch, shape, mesh).
+
+All builders work on ShapeDtypeStructs only — no allocation — so the same
+code path serves the 512-device dry-run and real launches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, input_specs
+from ..models import sharding, transformer
+from ..training.optimizer import OptimizerConfig
+from ..training.train_loop import TrainConfig, make_train_step
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(mesh, specs: dict):
+    """tokens/labels/mask [B, T] → batch over (pod, data); embeds likewise;
+    M-RoPE positions [3, B, T] → batch on axis 1.  Non-divisible dims
+    (e.g. long_500k batch 1) fall back to replication."""
+    rules = sharding.logical_to_spec
+    out = {}
+    for name, s in specs.items():
+        if name == "positions":
+            spec = P(None, *rules(("batch",)))
+        elif s.ndim == 3:
+            spec = P(*rules(("batch",)), None, None)
+        else:
+            spec = P(*rules(("batch",)), None)
+        out[name] = _ns(mesh, sharding.sanitize_spec(mesh, spec, s.shape))
+    return out
+
+
+def opt_state_shardings(mesh, params_abs, params_sh):
+    """mu/nu mirror the param shardings; counters replicate."""
+    return {"mu": params_sh, "nu": params_sh,
+            "count": _ns(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg, shape_name: str, mesh, *,
+                     microbatches: int = 1, grad_compress: bool = False,
+                     xent_chunk: int = 512):
+    """Returns (fn, abstract_args, in_shardings).
+
+    fn(state, batch) -> (state, metrics); state = {params, opt, step}."""
+    sharding.set_mesh(mesh)
+    step_kind, specs = input_specs(cfg, shape_name)
+    assert step_kind == "train", shape_name
+
+    tcfg = TrainConfig(opt=OptimizerConfig(), microbatches=microbatches,
+                       grad_compress=grad_compress, xent_chunk=xent_chunk)
+    loss_fn = lambda p, b: transformer.lm_loss(p, b, cfg,
+                                               xent_chunk=xent_chunk)
+    step = make_train_step(loss_fn, tcfg)
+
+    params_abs = transformer.abstract_params(cfg)
+    if cfg.param_dtype != jnp.float32:  # §Perf params_bf16 variant
+        params_abs = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, cfg.param_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params_abs)
+    opt_abs = {"mu": jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs),
+        "nu": jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs),
+        "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_abs = {"params": params_abs, "opt": opt_abs,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if grad_compress:
+        state_abs["compress"] = {"error": jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(
+                p.shape if p.size >= 1024 else (), jnp.float32), params_abs)}
+
+    params_sh = sharding.param_shardings(mesh, params_abs)
+    state_sh = {"params": params_sh,
+                "opt": opt_state_shardings(mesh, params_abs, params_sh),
+                "step": _ns(mesh, P())}
+    if grad_compress:
+        state_sh["compress"] = {"error": jax.tree.map(
+            lambda p, s: s if p.size >= 1024 else _ns(mesh, P()),
+            params_abs, params_sh)}
+
+    batch_abs = specs
+    batch_sh = batch_shardings(mesh, specs)
+    return step, (state_abs, batch_abs), (state_sh, batch_sh)
+
+
+def _serving_params_abs(cfg):
+    """Abstract params for serving steps: packed 6-bit codes when the
+    config carries the paper's quant (decode is weight-HBM-bound; the
+    packed form is the technique's serving win)."""
+    params_abs = transformer.abstract_params(cfg)
+    if cfg.quant == "logq6":
+        from ..serving.quantize import abstract_quantized_params
+        return abstract_quantized_params(params_abs)
+    return params_abs
+
+
+def build_prefill_step(cfg, shape_name: str, mesh, *, cache_dtype=jnp.bfloat16):
+    """fn(params, inputs_dict) -> (last_hidden, cache)."""
+    sharding.set_mesh(mesh)
+    step_kind, specs = input_specs(cfg, shape_name)
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+
+    def step(params, batch):
+        inputs = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+        cache = transformer.init_cache(cfg, B, S, cache_dtype)
+        last, new_cache = transformer.prefill(
+            params, inputs, cfg, cache, positions=batch.get("positions"))
+        return last, new_cache
+
+    params_abs = _serving_params_abs(cfg)
+    params_sh = sharding.param_shardings(mesh, params_abs)
+    batch_sh = batch_shardings(mesh, specs)
+    return step, (params_abs, specs), (params_sh, batch_sh)
+
+
+def build_decode_step(cfg, shape_name: str, mesh, *, cache_dtype=jnp.bfloat16):
+    """fn(params, cache, batch) -> (logits, cache').  One new token against
+    a seq_len-deep cache — the assigned decode_*/long_* cells."""
+    sharding.set_mesh(mesh)
+    step_kind, specs = input_specs(cfg, shape_name)
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+
+    def step(params, cache, batch):
+        inputs = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+        return transformer.decode_step(params, inputs, cfg, cache,
+                                       positions=batch.get("positions"))
+
+    params_abs = _serving_params_abs(cfg)
+    cache_abs = transformer.abstract_cache(cfg, B, S, cache_dtype)
+    params_sh = sharding.param_shardings(mesh, params_abs)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    cache_sh = jax.tree.map(
+        lambda spec, leaf: _ns(mesh,
+                               sharding.sanitize_spec(mesh, spec, leaf.shape)),
+        sharding.cache_specs(cache_abs, B, dp), cache_abs)
+    batch_sh = batch_shardings(mesh, specs)
+    return step, (params_abs, cache_abs, specs), \
+        (params_sh, cache_sh, batch_sh)
+
+
+def build_step(cfg, shape_name: str, mesh, **kw):
+    kind = SHAPES[shape_name]["step"]
+    if kind == "train":
+        return "train", build_train_step(cfg, shape_name, mesh, **kw)
+    if kind == "prefill":
+        return "prefill", build_prefill_step(cfg, shape_name, mesh)
+    return "decode", build_decode_step(cfg, shape_name, mesh)

@@ -1,0 +1,2 @@
+"""Model zoo: transformer assembly + mixers + CNN substrate."""
+from . import attention, griffin, layers, moe, rwkv, sharding, transformer

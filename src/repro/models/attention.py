@@ -1,0 +1,143 @@
+"""GQA/MQA attention mixer with RoPE/M-RoPE, QKV bias, windows and KV cache.
+
+Cache layouts:
+  * global ('attn') layers: [B, max_len, Hkv, hd], written at `index`.
+  * 'local' layers: ring buffer of size `window` — decode writes at
+    index % window and attends with key-position offsets so never-written
+    slots (absolute position < 0) are masked.  This is what makes the
+    gemma3/recurrentgemma long_500k cells sub-quadratic in cache memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from . import sharding
+from .layers import _init, apply_rope, dense
+
+
+def attn_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    p = {"wq": _init(ks[0], (D, cfg.q_dim)),
+         "wk": _init(ks[1], (D, cfg.kv_dim)),
+         "wv": _init(ks[2], (D, cfg.kv_dim)),
+         "wo": _init(ks[3], (cfg.q_dim, D))}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,))
+        p["bk"] = jnp.zeros((cfg.kv_dim,))
+        p["bv"] = jnp.zeros((cfg.kv_dim,))
+    return p
+
+
+def kv_cache_len(cfg, kind, max_len):
+    if kind == "local" and cfg.attn_window is not None:
+        return min(max_len, cfg.attn_window)
+    return max_len
+
+
+def init_kv_cache(cfg, kind, batch, max_len, dtype=jnp.bfloat16):
+    S = kv_cache_len(cfg, kind, max_len)
+    return {"k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+def _qkv(p, h, cfg, positions):
+    B, T, _ = h.shape
+    q = dense({"w": p["wq"], **({"b": p["bq"]} if "bq" in p else {})}, h, cfg)
+    k = dense({"w": p["wk"], **({"b": p["bk"]} if "bk" in p else {})}, h, cfg)
+    v = dense({"w": p["wv"], **({"b": p["bv"]} if "bv" in p else {})}, h, cfg)
+    q = q.reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.attn_shard == "heads":
+        # Megatron-style TP: heads over the model axis, head_dim whole.
+        # Without this the projections' column sharding splits head_dim,
+        # and the score einsum's contraction emits partial-sum all-reduces
+        # of [B,H,Tq,block] — the dominant collective in the baseline.
+        q = sharding.constrain(q, ("batch", None, "tensor", None))
+        k = sharding.constrain(k, ("batch", None, "tensor", None))
+        v = sharding.constrain(v, ("batch", None, "tensor", None))
+    elif cfg.attn_shard == "seq" and T > 1:
+        # sequence-parallel attention: queries sharded over model on T,
+        # k/v whole (cheap gather for MQA/GQA small kv_dim) — scores and
+        # softmax are fully local, no attention collectives at all.
+        q = sharding.constrain(q, ("batch", "tp_seq", None, None))
+        k = sharding.constrain(k, ("batch", None, None, None))
+        v = sharding.constrain(v, ("batch", None, None, None))
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def attention_mixer(p, h, cfg, *, kind="attn", positions, cache=None,
+                    index=None):
+    """h: [B, T, D] → (out [B, T, D], new_cache).
+
+    Modes: cache=None (training); T>1 + cache (prefill: attend within the
+    chunk, then populate the cache); T==1 + cache (decode at `index`)."""
+    window = cfg.attn_window if kind == "local" else None
+    q, k, v = _qkv(p, h, cfg, positions)
+    B, T = h.shape[:2]
+    bk = cfg.attn_block_k
+
+    if cache is None:
+        out = ops.attention(q, k, v, causal=True, window=window,
+                            impl=cfg.attn_impl, block_k=bk,
+                            acc_dtype=cfg.attn_acc_dtype,
+                            gqa_broadcast=cfg.gqa_broadcast)
+        new_cache = None
+
+    elif T > 1:  # prefill
+        out = ops.attention(q, k, v, causal=True, window=window,
+                            impl=cfg.attn_impl, block_k=bk,
+                            acc_dtype=cfg.attn_acc_dtype,
+                            gqa_broadcast=cfg.gqa_broadcast)
+        S = cache["k"].shape[1]
+        if S >= T:  # cache holds the whole chunk
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        else:       # ring smaller than the chunk: keep the last S tokens
+            ck = k[:, T - S:].astype(cache["k"].dtype)
+            cv = v[:, T - S:].astype(cache["v"].dtype)
+        new_cache = {"k": ck, "v": cv}
+
+    else:        # decode one token at absolute position `index`
+        S = cache["k"].shape[1]
+        is_ring = window is not None and S <= window
+        slot = (index % S) if is_ring else index
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        if is_ring:
+            # unroll the ring into logical order (oldest first): the key at
+            # array slot j has absolute position index - S + 1 + j after a
+            # roll by -(slot+1); never-written slots land at positions < 0
+            # and are masked by k_offset semantics.
+            idxs = (jnp.arange(S) + slot + 1) % S
+            ck_l = jnp.take(ck, idxs, axis=1)
+            cv_l = jnp.take(cv, idxs, axis=1)
+            out = ops.attention(q, ck_l, cv_l, causal=True, window=window,
+                                q_offset=index, k_offset=index - S + 1,
+                                impl=cfg.attn_impl, block_k=min(bk, S),
+                                acc_dtype=cfg.attn_acc_dtype,
+                                gqa_broadcast=cfg.gqa_broadcast)
+        else:
+            out = ops.attention(q, ck, cv, causal=True, window=window,
+                                q_offset=index, impl=cfg.attn_impl,
+                                block_k=min(bk, S),
+                                acc_dtype=cfg.attn_acc_dtype,
+                                gqa_broadcast=cfg.gqa_broadcast)
+
+    if cfg.attn_shard == "heads":
+        out = sharding.constrain(out, ("batch", None, "tensor", None))
+    elif cfg.attn_shard == "seq" and T > 1:
+        out = sharding.constrain(out, ("batch", "tp_seq", None, None))
+    out = out.reshape(B, T, cfg.q_dim)
+    return dense({"w": p["wo"]}, out, cfg), new_cache

@@ -1,0 +1,249 @@
+"""CNN substrate in JAX — the networks the paper benchmarks (VGG-16,
+MobileNet v1, ResNet-34, SqueezeNet) with optional base-√2 log fake-quant
+on conv weights *and* post-ReLU activations (paper §3: ReLU removes the
+need for an activation sign bit).
+
+These are real, trainable JAX models.  `quant="logq6"` inserts
+`fake_log_quant` (straight-through estimator) on every conv/dense weight and
+on every post-ReLU activation, matching the accelerator's numerics; the
+functional bit-exact path lives in `core/pe_grid.py`, and these two are
+cross-checked in tests.
+
+Layer lists intentionally mirror `core/accelerator.py` so the analytical
+dataflow model and the executable model describe the same networks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.logquant import DEFAULT as LOGQ_DEFAULT
+from ..core.logquant import LogQuantConfig, fake_log_quant
+
+# ---------------------------------------------------------------------------
+# quant-aware primitives
+# ---------------------------------------------------------------------------
+
+
+def _maybe_fq(w, quant: str | None, cfg: LogQuantConfig):
+    return fake_log_quant(w, cfg) if quant == "logq6" else w
+
+
+def conv2d(p, x, *, stride=1, pad="SAME", quant=None, qcfg=LOGQ_DEFAULT,
+           groups=1):
+    """x: [B, H, W, Cin]; p['w']: [K, K, Cin//groups, Cout]."""
+    w = _maybe_fq(p["w"], quant, qcfg)
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def conv_init(key, k, cin, cout, groups=1, dtype=jnp.float32):
+    fan_in = k * k * cin // groups
+    w = jax.random.normal(key, (k, k, cin // groups, cout), dtype)
+    return {"w": w * (2.0 / fan_in) ** 0.5, "b": jnp.zeros((cout,), dtype)}
+
+
+def relu_q(x, quant=None, qcfg=LOGQ_DEFAULT):
+    """ReLU then (optionally) log-requantize — the paper's post-processing
+    block: ReLU + log-table requantization before writing back to DDR."""
+    x = jax.nn.relu(x)
+    return _maybe_fq(x, quant, qcfg) if quant == "logq6" else x
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def maxpool(x, k=2, s=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# VGG-16
+# ---------------------------------------------------------------------------
+
+_VGG_PLAN = [  # (Cout, pool_after)
+    (64, False), (64, True), (128, False), (128, True),
+    (256, False), (256, False), (256, True),
+    (512, False), (512, False), (512, True),
+    (512, False), (512, False), (512, True),
+]
+
+
+def vgg16_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
+    keys = jax.random.split(key, len(_VGG_PLAN) + 1)
+    params, c = [], cin
+    for i, (cout, _) in enumerate(_VGG_PLAN):
+        cout = max(8, int(cout * width_mult))
+        params.append(conv_init(keys[i], 3, c, cout))
+        c = cout
+    head = {"w": jax.random.normal(keys[-1], (c, n_classes)) * (1 / c) ** 0.5,
+            "b": jnp.zeros((n_classes,))}
+    return {"convs": params, "head": head}
+
+
+def vgg16_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
+    for p, (_, pool) in zip(params["convs"], _VGG_PLAN):
+        x = relu_q(conv2d(p, x, quant=quant, qcfg=qcfg), quant, qcfg)
+        if pool and min(x.shape[1], x.shape[2]) >= 2:
+            x = maxpool(x)
+    x = avgpool_global(x)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# MobileNet v1 (depthwise separable — the paper's separable mode)
+# ---------------------------------------------------------------------------
+
+_MBN_PAIRS = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2)] + \
+             [(512, 1)] * 5 + [(1024, 2), (1024, 1)]
+
+
+def mobilenet_v1_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
+    n = 1 + 2 * len(_MBN_PAIRS) + 1
+    keys = jax.random.split(key, n)
+    c0 = max(8, int(32 * width_mult))
+    params = {"stem": conv_init(keys[0], 3, cin, c0), "pairs": []}
+    c = c0
+    for i, (cout, _) in enumerate(_MBN_PAIRS):
+        cout = max(8, int(cout * width_mult))
+        dw = conv_init(keys[1 + 2 * i], 3, c, c, groups=c)
+        pw = conv_init(keys[2 + 2 * i], 1, c, cout)
+        params["pairs"].append({"dw": dw, "pw": pw})
+        c = cout
+    params["head"] = {"w": jax.random.normal(keys[-1], (c, n_classes))
+                      * (1 / c) ** 0.5, "b": jnp.zeros((n_classes,))}
+    return params
+
+
+def mobilenet_v1_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
+    x = relu_q(conv2d(params["stem"], x, stride=2, quant=quant, qcfg=qcfg),
+               quant, qcfg)
+    for pair, (_, stride) in zip(params["pairs"], _MBN_PAIRS):
+        c = x.shape[-1]
+        x = relu_q(conv2d(pair["dw"], x, stride=stride, groups=c,
+                          quant=quant, qcfg=qcfg), quant, qcfg)
+        x = relu_q(conv2d(pair["pw"], x, quant=quant, qcfg=qcfg), quant, qcfg)
+    x = avgpool_global(x)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-34
+# ---------------------------------------------------------------------------
+
+_R34_STAGES = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)]
+
+
+def resnet34_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
+    blocks = sum(b for _, b, _ in _R34_STAGES)
+    keys = iter(jax.random.split(key, 2 + 3 * blocks))
+    c0 = max(8, int(64 * width_mult))
+    params = {"stem": conv_init(next(keys), 5, cin, c0), "stages": []}
+    cin_cur = c0
+    for cout, nblocks, first_stride in _R34_STAGES:
+        cout = max(8, int(cout * width_mult))
+        stage = []
+        for b in range(nblocks):
+            st = first_stride if b == 0 else 1
+            blk = {"c1": conv_init(next(keys), 3, cin_cur, cout),
+                   "c2": conv_init(next(keys), 3, cout, cout)}
+            if st != 1 or cin_cur != cout:
+                blk["proj"] = conv_init(next(keys), 1, cin_cur, cout)
+            stage.append((blk, st))
+            cin_cur = cout
+        params["stages"].append(stage)
+    params["head"] = {"w": jax.random.normal(next(keys), (cin_cur, n_classes))
+                      * (1 / cin_cur) ** 0.5, "b": jnp.zeros((n_classes,))}
+    return params
+
+
+def resnet34_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
+    x = relu_q(conv2d(params["stem"], x, stride=2, quant=quant, qcfg=qcfg),
+               quant, qcfg)
+    if min(x.shape[1], x.shape[2]) >= 2:
+        x = maxpool(x)
+    for stage in params["stages"]:
+        for blk, st in stage:
+            y = relu_q(conv2d(blk["c1"], x, stride=st, quant=quant,
+                              qcfg=qcfg), quant, qcfg)
+            y = conv2d(blk["c2"], y, quant=quant, qcfg=qcfg)
+            sc = conv2d(blk["proj"], x, stride=st, quant=quant, qcfg=qcfg) \
+                if "proj" in blk else x
+            x = relu_q(y + sc, quant, qcfg)
+    x = avgpool_global(x)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet v1.0 (Fig-1 net)
+# ---------------------------------------------------------------------------
+
+_FIRES = [(96, 16, 64), (128, 16, 64), (128, 32, 128), (256, 32, 128),
+          (256, 48, 192), (384, 48, 192), (384, 64, 256), (512, 64, 256)]
+
+
+def squeezenet_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
+    keys = iter(jax.random.split(key, 2 + 3 * len(_FIRES)))
+    m = lambda c: max(4, int(c * width_mult))
+    params = {"stem": conv_init(next(keys), 5, cin, m(96)), "fires": []}
+    for cin_f, sq, ex in _FIRES:
+        params["fires"].append({
+            "squeeze": conv_init(next(keys), 1, m(cin_f), m(sq)),
+            "e1": conv_init(next(keys), 1, m(sq), m(ex)),
+            "e3": conv_init(next(keys), 3, m(sq), m(ex))})
+    params["final"] = conv_init(next(keys), 1, m(512), n_classes)
+    return params
+
+
+def squeezenet_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
+    x = relu_q(conv2d(params["stem"], x, stride=2, quant=quant, qcfg=qcfg),
+               quant, qcfg)
+    if min(x.shape[1], x.shape[2]) >= 2:
+        x = maxpool(x, 3, 2)
+    for i, fire in enumerate(params["fires"]):
+        if i in (3, 7) and min(x.shape[1], x.shape[2]) >= 2:
+            x = maxpool(x, 3, 2)
+        s = relu_q(conv2d(fire["squeeze"], x, quant=quant, qcfg=qcfg),
+                   quant, qcfg)
+        e1 = relu_q(conv2d(fire["e1"], s, quant=quant, qcfg=qcfg), quant, qcfg)
+        e3 = relu_q(conv2d(fire["e3"], s, quant=quant, qcfg=qcfg), quant, qcfg)
+        x = jnp.concatenate([e1, e3], axis=-1)
+    x = relu_q(conv2d(params["final"], x, quant=quant, qcfg=qcfg), quant, qcfg)
+    return avgpool_global(x)
+
+
+# ---------------------------------------------------------------------------
+# registry + loss
+# ---------------------------------------------------------------------------
+
+CNNS = {
+    "vgg16": (vgg16_init, vgg16_apply),
+    "mobilenet_v1": (mobilenet_v1_init, mobilenet_v1_apply),
+    "resnet34": (resnet34_init, resnet34_apply),
+    "squeezenet": (squeezenet_init, squeezenet_apply),
+}
+
+
+def make_cnn(name: str, key, *, n_classes=1000, cin=3, width_mult=1.0,
+             quant=None, qcfg=LOGQ_DEFAULT):
+    init, apply = CNNS[name]
+    params = init(key, n_classes=n_classes, cin=cin, width_mult=width_mult)
+    return params, functools.partial(apply, quant=quant, qcfg=qcfg)
+
+
+def cnn_loss(apply_fn, params, batch):
+    logits = apply_fn(params, batch["images"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+    return jnp.mean(nll), {"acc": acc}

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block:  x → (gelu gate branch) ⊙ (proj → causal conv1d(w=4) → RG-LRU) → out
+
+RG-LRU:  r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+         log a_t = −c · softplus(Λ) ⊙ r_t           (c = 8)
+         h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill uses `jax.lax.associative_scan` over the diagonal linear
+recurrence (parallel in T); decode carries (h, conv window) — O(1) state,
+which is what makes the long_500k cell run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+C_RGLRU = 8.0
+
+
+def griffin_init(key, cfg):
+    ks = jax.random.split(key, 7)
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    return {
+        "w_gate": _init(ks[0], (D, W)),     # gelu branch
+        "w_x": _init(ks[1], (D, W)),        # recurrent branch input
+        "conv_w": _init(ks[2], (cfg.conv1d_width, W), scale=0.3),
+        "conv_b": jnp.zeros((W,)),
+        "w_r": _init(ks[3], (W, W), scale=0.01),
+        "w_i": _init(ks[4], (W, W), scale=0.01),
+        "lam": jnp.full((W,), 2.0),         # softplus(2) ≈ 2.1 → a ≈ exp(-17r)
+        "w_out": _init(ks[5], (W, D)),
+    }
+
+
+def griffin_state_init(cfg, batch):
+    W = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, W), jnp.float32)}
+
+
+def _causal_conv1d(x, w, b, prev=None):
+    """x: [B, T, W]; w: [K, W] depthwise; prev: [B, K-1, W] carried context."""
+    K = w.shape[0]
+    B, T, Wd = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, Wd), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + T] * w[i].astype(x.dtype) for i in range(K))
+    return out + b.astype(x.dtype), xp[:, -(K - 1):]
+
+
+def _rglru(x, loga, h0=None):
+    """Diagonal linear recurrence via associative scan.
+
+    x: [B, T, W] already gated by i_t; loga: [B, T, W] (≤ 0)."""
+    f32 = jnp.float32
+    a = jnp.exp(loga.astype(f32))
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = mult * x.astype(f32)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(f32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def griffin_mixer(p, x, cfg, state=None):
+    """x: [B, T, D] → (out [B, T, D], new_state)."""
+    B, T, D = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_x"].astype(x.dtype)
+    prev = state["conv"] if state is not None else None
+    u, conv_carry = _causal_conv1d(u, p["conv_w"], p["conv_b"], prev)
+
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_r"])
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"])
+    loga = -C_RGLRU * jax.nn.softplus(p["lam"])[None, None] * r
+    gated = i * u.astype(jnp.float32)
+
+    h0 = state["h"] if state is not None else None
+    h = _rglru(gated, loga, h0)
+
+    out = (gate * h.astype(x.dtype)) @ p["w_out"].astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h[:, -1], "conv": conv_carry.astype(jnp.float32)}
+    return out, new_state

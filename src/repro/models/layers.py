@@ -1,0 +1,187 @@
+"""Primitive layers: norms, dense (+ optional log-quantized weights),
+rotary embeddings (incl. M-RoPE), FFNs, embedding table.
+
+Parameters are plain nested dicts of jnp arrays.  Every dense weight has a
+canonical [in, out] layout so the sharding rules in `models/sharding.py`
+apply uniformly.  When `cfg.quant == "logq6"`, matmuls fake-quantize weights
+onto the base-√2 grid (QAT / accuracy studies) — the serving path swaps in
+`kernels.ops.log_matmul` against pre-packed codes (see `serving/engine.py`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.logquant import LogQuantConfig, QuantizedTensor, fake_log_quant
+from repro.kernels.ops import log_matmul
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / (shape[0] ** 0.5)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    return {"w": _init(key, (d_in, d_out), dtype=dtype)}
+
+
+def dense_bias_init(key, d_in, d_out, dtype=jnp.float32):
+    return {"w": _init(key, (d_in, d_out), dtype=dtype),
+            "b": jnp.zeros((d_out,), dtype)}
+
+
+def dense(p, x, cfg=None):
+    """x @ w (+ b).  Honors cfg.quant: fake-quant (train/QAT) or a packed
+    QuantizedTensor left by the serving quantizer."""
+    w = p["w"]
+    if isinstance(w, QuantizedTensor):
+        y = log_matmul(x, w)
+    else:
+        if cfg is not None and cfg.quant == "logq6":
+            w = fake_log_quant(w, LogQuantConfig())
+        y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    return rmsnorm_init(d) if cfg.norm == "rmsnorm" else layernorm_init(d)
+
+
+def norm(cfg, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (+ M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions, head_dim, theta):
+    """positions: [B, T] → cos/sin [B, T, head_dim/2]."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta=10_000.0, mrope_sections=None):
+    """x: [B, T, H, D]; positions: [B, T] (or [3, B, T] for M-RoPE).
+
+    M-RoPE (Qwen2-VL): the head_dim/2 frequency channels are split into
+    (t, h, w) sections, each rotated by its own position stream."""
+    B, T, H, D = x.shape
+    half = D // 2
+    if mrope_sections is None:
+        cos, sin = _rope_angles(positions, D, theta)
+    else:
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        if positions.ndim == 2:  # text-only: reuse the same stream
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        coss, sins = [], []
+        start = 0
+        freq_full = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+        for i, sec in enumerate(mrope_sections):
+            f = freq_full[start:start + sec]
+            ang = positions[i][..., None].astype(jnp.float32) * f
+            coss.append(jnp.cos(ang))
+            sins.append(jnp.sin(ang))
+            start += sec
+        cos = jnp.concatenate(coss, -1)
+        sin = jnp.concatenate(sins, -1)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense path; MoE lives in models/moe.py)
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.ffn in ("swiglu", "geglu"):
+        return {"w1": _init(k1, (D, F)), "w3": _init(k3, (D, F)),
+                "w2": _init(k2, (F, D))}
+    return {"w1": _init(k1, (D, F)), "w2": _init(k2, (F, D))}
+
+
+def ffn(p, x, cfg):
+    if cfg.ffn == "swiglu":
+        h = jax.nn.silu(dense({"w": p["w1"]}, x, cfg)) * \
+            dense({"w": p["w3"]}, x, cfg)
+    elif cfg.ffn == "geglu":
+        h = jax.nn.gelu(dense({"w": p["w1"]}, x, cfg)) * \
+            dense({"w": p["w3"]}, x, cfg)
+    else:
+        h = jax.nn.gelu(dense({"w": p["w1"]}, x, cfg))
+    return dense({"w": p["w2"]}, h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg):
+    # 1/√d keeps tied-unembed logits O(1) at init (loss starts at ≈ln V);
+    # cfg.embed_scale (gemma) restores O(1) embeddings at the input side.
+    p = {"table": _init(key, (cfg.vocab, cfg.d_model),
+                        scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _init(jax.random.fold_in(key, 1),
+                             (cfg.d_model, cfg.vocab))
+    return p
+
+
+def embed(p, tokens, cfg):
+    h = jnp.take(p["table"].astype(cfg.act_dtype), tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def unembed(p, h, cfg):
+    if cfg.tie_embeddings:
+        w = p["table"].astype(h.dtype).T
+        if cfg.quant == "logq6" and not isinstance(w, QuantizedTensor):
+            pass  # tied table stays fp — quantizing it hurts embed lookups
+        return h @ w
+    return dense({"w": p["lm_head"]}, h, cfg)

@@ -1,0 +1,112 @@
+"""GShard-style top-k Mixture-of-Experts FFN with grouped capacity-factor
+dispatch.
+
+Expert-parallel: experts shard over the 'tensor' mesh axis; dispatch/
+combine are dense einsums against a one-hot, so GSPMD lowers the exchange
+to all-to-all-ish collectives without ragged ops.
+
+Tokens are routed within **groups** of `moe_group` tokens (GShard's group
+dimension = the per-device token block).  Capacity is per group —
+C = cf·G·K/E — so the dispatch tensor is [n_g, G, E, C] with total bytes
+N·E·C_g instead of the ungrouped N·E·C_N (C grows with the token count:
+ungrouped dispatch at 1M tokens is 160× larger and dominated the §Roofline
+memory term of every MoE cell).
+
+Router aux loss = load-balancing loss of Switch/GShard
+(E · Σ_e fraction_tokens_e · mean_prob_e), computed globally.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding
+from .layers import _init
+
+# per-group token block for routing; must divide the token count (falls
+# back to one global group otherwise, e.g. tiny smoke configs)
+DEFAULT_GROUP = 4096
+
+
+def moe_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {"router": _init(ks[0], (D, E), scale=0.02)}
+    if cfg.ffn in ("swiglu", "geglu"):
+        p["moe_w1"] = _init(ks[1], (E, D, F))
+        p["moe_w3"] = _init(ks[3], (E, D, F))
+    else:
+        p["moe_w1"] = _init(ks[1], (E, D, F))
+    p["moe_w2"] = _init(ks[2], (E, F, D))
+    return p
+
+
+def _group_size(N: int) -> int:
+    if N % DEFAULT_GROUP == 0:
+        return DEFAULT_GROUP
+    return N  # tiny configs: one group (ungrouped = old behaviour)
+
+
+def moe_ffn(p, x, cfg, capacity: int | None = None):
+    """x: [B, T, D] → (y: [B, T, D], aux_loss scalar)."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * T
+    f32 = jnp.float32
+    xt = x.reshape(N, D)
+
+    logits = (xt.astype(f32) @ p["router"].astype(f32))          # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                # [N, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    G = _group_size(N)
+    n_g = N // G
+    if capacity is None:
+        if T == 1:   # decode: no capacity drops (every token must route)
+            capacity = G
+        else:
+            capacity = int(cfg.capacity_factor * G * K / E) or 1
+    C = max(1, min(capacity, G))
+
+    # group the token axis: [n_g, G, ...]
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=f32).reshape(n_g, G, K, E)
+    gate_g = gate_vals.reshape(n_g, G, K)
+    xg = xt.reshape(n_g, G, D)
+    xg = sharding.constrain(xg, ("batch", None, None))
+
+    # position of each (token, k) within its expert's per-group queue
+    flat = onehot.reshape(n_g, G * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(n_g, G, K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                         # [n_g,G,K]
+    keep = pos < C
+    gate_g = gate_g * keep.astype(f32)
+
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=f32)
+    dispatch = jnp.einsum("gnke,gnkc->gnec", onehot,
+                          slot_oh * keep[..., None].astype(f32))
+    combine = jnp.einsum("gnke,gnkc,gnk->gnec", onehot, slot_oh, gate_g)
+
+    # dispatch: [n_g, E, C, D]; groups shard over batch, experts over model
+    xe = jnp.einsum("gnec,gnd->gecd", dispatch.astype(x.dtype), xg)
+    xe = sharding.constrain(xe, ("batch", "tensor", None, None))
+    w1 = p["moe_w1"].astype(x.dtype)
+    if cfg.ffn == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w1))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["moe_w3"].astype(x.dtype))
+    elif cfg.ffn == "geglu":
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, w1))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["moe_w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, w1))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["moe_w2"].astype(x.dtype))
+    ye = sharding.constrain(ye, ("batch", "tensor", None, None))
+    y = jnp.einsum("gnec,gecd->gnd", combine.astype(x.dtype), ye)
+
+    # load-balancing aux loss (global)
+    frac = jnp.mean(jnp.sum(onehot, axis=2).reshape(N, E), axis=0)
+    mprob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mprob) * cfg.router_aux_weight
+
+    return y.reshape(B, T, D), aux.astype(f32)

@@ -1,0 +1,123 @@
+"""RWKV6 ("Finch") layer: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure (arXiv:2404.05892): static token-shift interpolation
+μ_{r,k,v,w,g}, projections r/k/v/g, a low-rank (LoRA) data-dependent decay
+    log w_t = −exp(w0 + tanh(x_w A) B)   (≤ 0 per channel)
+a per-head bonus u for the current token, the WKV recurrence (our
+`kernels/wkv6`), per-head group-norm, and an output gate.  Channel-mix is
+the squared-ReLU gated MLP of RWKV.
+
+State per layer (decode): x_prev for both mixes [B, D] and the WKV matrix
+state [B, H, K, V] — O(1) in sequence length (the long_500k cell).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import _init, dense
+
+
+def _mm(x, w):
+    """x @ w via layers.dense — supports packed QuantizedTensor weights."""
+    return dense({"w": w}, x)
+
+
+def rwkv_init(key, cfg):
+    ks = jax.random.split(key, 12)
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_size
+    hs = cfg.rwkv_head_size
+    L = cfg.rwkv_decay_lora
+    F = cfg.d_ff
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, D)),              # r, k, v, w, g shifts
+        "wr": _init(ks[0], (D, D)), "wk": _init(ks[1], (D, D)),
+        "wv": _init(ks[2], (D, D)), "wg": _init(ks[3], (D, D)),
+        "wo": _init(ks[4], (D, D)),
+        "w0": jnp.zeros((D,)) - 0.6,               # base decay
+        "wA": _init(ks[5], (D, L), scale=0.01),
+        "wB": _init(ks[6], (L, D), scale=0.01),
+        "u": _init(ks[7], (H, hs), scale=0.5),
+        "ln_x": jnp.ones((D,)),                    # per-head group norm scale
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((2, D)),            # k, r shifts
+        "ck": _init(ks[8], (D, F)),
+        "cv": _init(ks[9], (F, D)),
+        "cr": _init(ks[10], (D, D)),
+    }
+
+
+def _token_shift(x, x_prev):
+    """[B, T, D] → previous token's features (x_prev fills t = 0)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv_state_init(cfg, batch):
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_size
+    hs = cfg.rwkv_head_size
+    return {"x_prev_t": jnp.zeros((batch, D), jnp.float32),
+            "x_prev_c": jnp.zeros((batch, D), jnp.float32),
+            "wkv": jnp.zeros((batch, H, hs, hs), jnp.float32)}
+
+
+def rwkv_time_mix(p, x, cfg, state=None):
+    """x: [B, T, D] → (out, new_state_parts)."""
+    B, T, D = x.shape
+    H = D // cfg.rwkv_head_size
+    hs = cfg.rwkv_head_size
+    xp = state["x_prev_t"].astype(x.dtype) if state is not None \
+        else jnp.zeros((B, D), x.dtype)
+    xx = _token_shift(x, xp) - x
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + xx * mu[i] for i in range(5))
+
+    r = _mm(xr, p["wr"]).reshape(B, T, H, hs)
+    k = _mm(xk, p["wk"]).reshape(B, T, H, hs)
+    v = _mm(xv, p["wv"]).reshape(B, T, H, hs)
+    g = jax.nn.silu(_mm(xg, p["wg"]))
+
+    # data-dependent decay (Finch): logw = -exp(w0 + tanh(xw A) B) ∈ (-inf, 0)
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    logw = -jnp.exp(jnp.clip(p["w0"][None, None] + lora, -8.0, 2.0))
+    logw = logw.reshape(B, T, H, hs)
+
+    wkv_state = state["wkv"] if state is not None else None
+    o, new_wkv = ops.wkv6(r, k, v, logw, p["u"],
+                          state=wkv_state, impl="blockwise",
+                          chunk=min(64, max(16, T)))
+    o = o.reshape(B, T, D)
+
+    # per-head group norm
+    o32 = o.astype(jnp.float32).reshape(B, T, H, hs)
+    mu_ = jnp.mean(o32, -1, keepdims=True)
+    var = jnp.var(o32, -1, keepdims=True)
+    o = ((o32 - mu_) * jax.lax.rsqrt(var + 1e-5)).reshape(B, T, D)
+    o = (o * p["ln_x"][None, None]).astype(x.dtype)
+
+    out = _mm(o * g, p["wo"])
+    new_state = None
+    if state is not None:
+        new_state = {"x_prev_t": x[:, -1].astype(jnp.float32),
+                     "wkv": new_wkv}
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, cfg, state=None):
+    B, T, D = x.shape
+    xp = state["x_prev_c"].astype(x.dtype) if state is not None \
+        else jnp.zeros((B, D), x.dtype)
+    xx = _token_shift(x, xp) - x
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + xx * mu[0]
+    xr = x + xx * mu[1]
+    k = jnp.square(jax.nn.relu(_mm(xk, p["ck"])))
+    out = jax.nn.sigmoid(_mm(xr, p["cr"])) * _mm(k, p["cv"])
+    new_state = None
+    if state is not None:
+        new_state = {"x_prev_c": x[:, -1].astype(jnp.float32)}
+    return out, new_state

@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules (MaxText-style) for every model family.
+
+Logical axes:
+  batch   activation batch            → (pod, data)
+  fsdp    param non-contracting dim   → (pod, data)   (ZeRO-3 via GSPMD)
+  tensor  heads / mlp / experts / vocab → model
+  seq     long-context sequence dim   → data
+
+`set_mesh(mesh)` installs a process-global mesh + rule map; model code calls
+`constrain(x, ("batch", None, None))` and it becomes a no-op when no mesh is
+installed (CPU unit tests) — so the same model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "rules": None}
+
+
+def default_rules(mesh: Mesh) -> dict:
+    axes = mesh.axis_names
+    dp = tuple(a for a in axes if a in ("pod", "data"))
+    return {"batch": dp if dp else None,
+            "fsdp": dp if dp else None,
+            "tensor": "model" if "model" in axes else None,
+            "seq": "data" if "data" in axes else None,
+            # sequence parallelism over the *model* axis (§Perf seq_tp):
+            "tp_seq": "model" if "model" in axes else None,
+            None: None}
+
+
+def set_mesh(mesh: Mesh | None, rules: dict | None = None):
+    _STATE["mesh"] = mesh
+    _STATE["rules"] = (rules or (default_rules(mesh) if mesh else None))
+
+
+def get_mesh() -> Mesh | None:
+    return _STATE["mesh"]
+
+
+def logical_to_spec(axes: tuple | None) -> P:
+    if axes is None:
+        return P()
+    rules = _STATE["rules"]
+    return P(*(rules.get(a) for a in axes))
+
+
+def constrain(x, axes: tuple | None):
+    """with_sharding_constraint when a mesh is installed, else identity.
+    Non-divisible dims fall back to replication (sanitize_spec)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = sanitize_spec(mesh, logical_to_spec(axes), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules — keyed by leaf name (canonical [in, out] layouts)
+# ---------------------------------------------------------------------------
+
+F, T = "fsdp", "tensor"
+
+PARAM_AXES = {
+    # attention
+    "wq": (F, T), "wk": (F, T), "wv": (F, T), "wo": (T, F),
+    "bq": (T,), "bk": (T,), "bv": (T,),
+    # dense FFN
+    "w1": (F, T), "w3": (F, T), "w2": (T, F),
+    # MoE (experts on tensor: expert parallelism)
+    "router": (F, None),
+    "moe_w1": (T, F, None), "moe_w3": (T, F, None), "moe_w2": (T, None, F),
+    # embeddings
+    "table": (T, F), "lm_head": (F, T),
+    # rwkv
+    "wg": (F, T), "wr": (F, T),
+    "ck": (F, T), "cv": (T, F), "cr": (F, T),
+    "wA": (F, None), "wB": (None, F), "u": (T, None),
+    # griffin
+    "w_gate": (F, T), "w_x": (F, T), "conv_w": (None, T), "conv_b": (T,),
+    "w_r": (T, None), "w_i": (T, None), "lam": (T,), "w_out": (T, F),
+}
+
+
+def _leaf_axes(path, leaf) -> tuple | None:
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = entry.key
+            break
+    axes = PARAM_AXES.get(name)
+    if axes is None:
+        return None  # replicate (norm scales, mus, w0, ln_x, …)
+    extra = leaf.ndim - len(axes)
+    if extra > 0:  # stacked scan segments prepend layer dims
+        axes = (None,) * extra + tuple(axes)
+    elif extra < 0:
+        return None
+    return axes
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim —
+    the general fallback that makes every (arch × mesh) lower (e.g. granite
+    vocab 49155 is odd → embed vocab dim replicates; decode batch 1 can't
+    shard over dp).  Replication is always legal; GSPMD handles the rest."""
+    ents = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    fixed = tuple(e if d % _axis_size(mesh, e) == 0 else None
+                  for e, d in zip(ents, shape))
+    return P(*fixed)
+
+
+def param_specs(params) -> "jax.tree_util.PyTreeDef":
+    """Tree of PartitionSpec matching `params` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: logical_to_spec(_leaf_axes(p, x)), params)
+
+
+def param_shardings(mesh, params):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(
+            mesh, sanitize_spec(mesh, logical_to_spec(_leaf_axes(p, x)),
+                                x.shape)),
+        params)
+
+
+# ---------------------------------------------------------------------------
+# cache / activation rules
+# ---------------------------------------------------------------------------
+
+
+def cache_axes(path, leaf, batch: int, dp_size: int) -> tuple:
+    """KV caches: shard batch when divisible, else shard long seq dims."""
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = entry.key
+            break
+    if name == "index" or leaf.ndim <= 1:
+        return None
+    shard_batch = batch % max(dp_size, 1) == 0 and batch >= dp_size
+    if name in ("k", "v"):           # [n_rep, B, S, Hkv, hd]
+        if shard_batch:
+            return (None, "batch", None, None, None)
+        return (None, None, "seq", None, None)
+    if name == "wkv":                # [n_rep, B, H, K, V]
+        return (None, "batch", "tensor", None, None) if shard_batch \
+            else (None, None, "tensor", None, None)
+    if name == "h":                  # [n_rep, B, W]
+        return (None, "batch", "tensor") if shard_batch \
+            else (None, None, "tensor")
+    if name == "conv":               # [n_rep, B, K-1, W]
+        return (None, "batch", None, "tensor") if shard_batch \
+            else (None, None, None, "tensor")
+    if name in ("x_prev_t", "x_prev_c"):  # [n_rep, B, D]
+        return (None, "batch", None) if shard_batch else None
+    return None
+
+
+def cache_specs(cache, batch: int, dp_size: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: logical_to_spec(cache_axes(p, x, batch, dp_size)), cache)

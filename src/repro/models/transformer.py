@@ -1,0 +1,268 @@
+"""Decoder assembly: segmented scan-over-layers, train loss, prefill/decode.
+
+Layer stacks are grouped into segments of repeating units (cfg.segments) and
+executed with `jax.lax.scan` over stacked parameters, so HLO size and compile
+time are O(|pattern|), not O(depth) — 126-layer llama3-405b compiles as one
+scanned unit.  Heterogeneous patterns (gemma3 5×local+1×global,
+recurrentgemma rec,rec,attn) unroll the unit *inside* the scan body.
+
+Cache pytree: {"index": int32 scalar, "segments": (per-segment stacked
+per-layer state, leading dim = n_rep)}.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding
+from .attention import attention_mixer, attn_init, init_kv_cache
+from .griffin import griffin_init, griffin_mixer, griffin_state_init
+from .layers import embed, embed_init, ffn, ffn_init, norm, norm_init, unembed
+from .moe import moe_ffn, moe_init
+from .rwkv import (rwkv_channel_mix, rwkv_init, rwkv_state_init,
+                   rwkv_time_mix)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(key, cfg, kind: str):
+    k1, k2 = jax.random.split(key)
+    if kind == "rwkv":
+        return {"norm1": norm_init(cfg), "norm2": norm_init(cfg),
+                "rwkv": rwkv_init(k1, cfg)}
+    if kind == "rec":
+        mixer = {"rec": griffin_init(k1, cfg)}
+    else:
+        mixer = {"attn": attn_init(k1, cfg)}
+    ffn_p = moe_init(k2, cfg) if cfg.is_moe else ffn_init(k2, cfg)
+    return {"norm1": norm_init(cfg), "norm2": norm_init(cfg),
+            **mixer, "ffn": ffn_p}
+
+
+def unit_init(key, cfg, unit):
+    keys = jax.random.split(key, len(unit))
+    return {f"l{i}": layer_init(keys[i], cfg, kind)
+            for i, kind in enumerate(unit)}
+
+
+def init_params(cfg, key):
+    keys = jax.random.split(key, len(cfg.segments) + 1)
+    segs = {}
+    for si, (unit, n_rep) in enumerate(cfg.segments):
+        rep_keys = jax.random.split(keys[si], n_rep)
+        segs[f"seg{si}"] = jax.vmap(lambda k: unit_init(k, cfg, unit))(rep_keys)
+    return {"embed": embed_init(keys[-1], cfg),
+            "segments": segs,
+            "final_norm": norm_init(cfg)}
+
+
+def abstract_params(cfg, key=None):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_struct(cfg, kind, batch, max_len, dtype=jnp.bfloat16):
+    if kind == "rwkv":
+        return rwkv_state_init(cfg, batch)
+    if kind == "rec":
+        return griffin_state_init(cfg, batch)
+    return init_kv_cache(cfg, kind, batch, max_len, dtype)
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    segs = {}
+    for si, (unit, n_rep) in enumerate(cfg.segments):
+        unit_struct = {f"l{i}": layer_cache_struct(cfg, kind, batch, max_len,
+                                                   dtype)
+                       for i, kind in enumerate(unit)}
+        segs[f"seg{si}"] = jax.tree.map(
+            lambda x: jnp.zeros((n_rep,) + x.shape, x.dtype), unit_struct)
+    return {"index": jnp.zeros((), jnp.int32), "segments": segs}
+
+
+def abstract_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(lp, h, cfg, kind, positions, lcache, index):
+    """One layer (pre-norm residual).  Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        o, s1 = rwkv_time_mix(lp["rwkv"], norm(cfg, lp["norm1"], h), cfg,
+                              lcache)
+        h = h + o
+        o, s2 = rwkv_channel_mix(lp["rwkv"], norm(cfg, lp["norm2"], h), cfg,
+                                 lcache)
+        h = h + o
+        new_cache = {**s1, **s2} if lcache is not None else None
+        return h, new_cache, aux
+    if kind == "rec":
+        o, s = griffin_mixer(lp["rec"], norm(cfg, lp["norm1"], h), cfg, lcache)
+        h = h + o
+        new_cache = s
+    else:
+        o, s = attention_mixer(lp["attn"], norm(cfg, lp["norm1"], h), cfg,
+                               kind=kind, positions=positions, cache=lcache,
+                               index=index)
+        h = h + o
+        new_cache = s
+    hn = norm(cfg, lp["norm2"], h)
+    if cfg.residual_shard == "seq" and cfg.sp_style == "megatron" \
+            and hn.shape[1] > 1:
+        # Megatron-SP: gather the tokens over the model axis here (one
+        # bf16 all-gather) so the FFN weights stay TP-sharded; the residual
+        # constraint after the block turns wo/w2 partial sums into
+        # reduce-scatters.
+        hn = sharding.constrain(hn, ("batch", None, None))
+    if cfg.is_moe:
+        o, aux = moe_ffn(lp["ffn"], hn, cfg)
+    else:
+        o = ffn(lp["ffn"], hn, cfg)
+    return h + o, new_cache, aux
+
+
+def _apply_unit(up, h, cfg, unit, positions, ucache, index):
+    seq_ax = "tp_seq" if cfg.residual_shard == "seq" and h.shape[1] > 1 \
+        else None
+    h = sharding.constrain(h, ("batch", seq_ax, None))
+    auxs = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    for i, kind in enumerate(unit):
+        lc = None if ucache is None else ucache[f"l{i}"]
+        h, nc, aux = _apply_layer(up[f"l{i}"], h, cfg, kind, positions, lc,
+                                  index)
+        auxs += aux
+        if ucache is not None:
+            new_cache[f"l{i}"] = nc
+    return h, (new_cache if ucache is not None else None), auxs
+
+
+def _run_segments(params, h, cfg, positions, cache, index):
+    new_segs = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (unit, n_rep) in enumerate(cfg.segments):
+        seg_params = params["segments"][f"seg{si}"]
+        seg_cache = None if cache is None else cache["segments"][f"seg{si}"]
+
+        def body(carry, xs, _unit=unit):
+            hh, aux = carry
+            up, uc = xs
+            hh, nc, a = _apply_unit(up, hh, cfg, _unit, positions, uc, index)
+            return (hh, aux + a), nc
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        # scan_unroll > 1 is used by the dry-run cost accounting (the XLA
+        # cost model counts while bodies once; unroll-diff recovers ×n_rep).
+        unroll = min(cfg.scan_unroll, n_rep) if n_rep > 1 else 1
+        (h, aux_total), seg_new = jax.lax.scan(
+            body, (h, aux_total), (seg_params, seg_cache), unroll=unroll)
+        new_segs[f"seg{si}"] = seg_new
+    return h, (new_segs if cache is not None else None), aux_total
+
+
+def forward(params, inputs, cfg, *, positions=None, cache=None):
+    """inputs: tokens [B, T] int (embed_inputs) or embeds [B, T, D].
+
+    Returns (hidden [B, T, D], new_cache, aux_loss)."""
+    if cfg.embed_inputs:
+        h = embed(params["embed"], inputs, cfg)
+        B, T = inputs.shape[:2]
+    else:
+        h = inputs.astype(cfg.act_dtype)
+        B, T = inputs.shape[:2]
+
+    index = cache["index"] if cache is not None else 0
+    if positions is None:
+        pos = jnp.arange(T)[None] + index
+        positions = jnp.broadcast_to(pos, (B, T))
+
+    h, new_segs, aux = _run_segments(params, h, cfg, positions, cache, index)
+    h = norm(cfg, params["final_norm"], h)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"index": index + T, "segments": new_segs}
+    return h, new_cache, aux
+
+
+def logits_fn(params, h, cfg):
+    logits = unembed(params["embed"], h, cfg)
+    return sharding.constrain(logits, ("batch", None, "tensor"))
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(params, h, labels, mask, cfg, chunk: int = 512):
+    """Cross-entropy without materialising [B, T, V] logits: scan over T
+    chunks (peak memory chunk×V — essential at vocab 256k × 1M tokens)."""
+    B, T, D = h.shape
+    pt = (-T) % chunk
+    if pt:
+        h = jnp.pad(h, ((0, 0), (0, pt), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pt)))
+        mask = jnp.pad(mask, ((0, 0), (0, pt)))
+    nC = (T + pt) // chunk
+    hc = h.reshape(B, nC, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nC, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, nC, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hh, ll, mm = xs
+        logits = logits_fn(params, hh, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mm
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mm)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, batch, cfg, xent_chunk: int = 512):
+    """batch: {"tokens" or "embeds", "labels", optional "mask", "positions"}."""
+    inputs = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones(labels.shape, jnp.float32))
+    h, _, aux = forward(params, inputs, cfg,
+                        positions=batch.get("positions"))
+    loss = chunked_xent(params, h, labels, mask, cfg, chunk=xent_chunk)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def prefill(params, inputs, cfg, cache, positions=None):
+    """Run the prompt, fill the cache, return last-token hidden state."""
+    h, new_cache, _ = forward(params, inputs, cfg, positions=positions,
+                              cache=cache)
+    return h[:, -1:], new_cache
+
+
+def decode_step(params, inputs, cfg, cache, positions=None):
+    """One token per sequence.  inputs: [B, 1] tokens (or [B, 1, D] embeds)."""
+    h, new_cache, _ = forward(params, inputs, cfg, positions=positions,
+                              cache=cache)
+    logits = logits_fn(params, h, cfg)
+    return logits, new_cache

@@ -1,0 +1,208 @@
+"""Batched serving engine: continuous-batching prefill + decode over the
+model zoo's unified cache pytree (KV caches for attention layers, recurrent
+state for RWKV/RG-LRU layers — `transformer.init_cache` covers all three).
+
+Design (vLLM-style, adapted to JAX static shapes):
+  · fixed engine batch of `max_batch` slots, each slot = one sequence;
+  · **prefill** runs one slot at a time at its own prompt length.  For
+    attention-only archs prompts are right-padded to a power-of-two bucket
+    (pad keys land at positions > index and are causally masked, then
+    progressively overwritten during decode, so they are never visible);
+    archs with recurrent layers (rwkv/rec) use exact lengths — any padding
+    would pollute the recurrent state;
+  · **decode** is one jitted program for all slots, vmapped over the slot
+    axis so every slot carries its own absolute position (ragged batching
+    without recompiles);
+  · finished slots are refilled from the queue between decode steps
+    (continuous batching) — shapes never change;
+  · log-quantized weights (cfg.quant == "logq6") cut weight HBM traffic
+    2.67× — the dominant roofline term of decode (§Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [T] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0           # 0 → greedy
+    seed: int = 0
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8
+    max_prompt: int = 128
+    max_len: int = 256                 # cache capacity (prompt + generation)
+    eos_id: int = -1                   # -1: never stop on a token
+    cache_dtype: Any = jnp.float32
+
+
+def _has_recurrence(cfg) -> bool:
+    return any(k in ("rwkv", "rec") for k in cfg.layer_pattern)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, ecfg: EngineConfig = EngineConfig()):
+        if not cfg.embed_inputs:
+            raise ValueError("engine serves token archs; frontend-stub archs "
+                             "(musicgen) are driven via launch/serve.py "
+                             "embeddings path")
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        B, L = ecfg.max_batch, ecfg.max_len
+        self.cache = transformer.init_cache(cfg, B, L, ecfg.cache_dtype)
+        self._pad_prefill = not _has_recurrence(cfg)
+        # per-slot host state
+        self.slot_req: list[Request | None] = [None] * B
+        self.slot_pos = np.zeros(B, np.int32)      # next write position
+        self.slot_last = np.zeros(B, np.int32)     # last emitted token
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self.stats = {"prefill_calls": 0, "decode_steps": 0,
+                      "tokens_out": 0}
+
+        cfg_ = cfg
+
+        def _prefill(params, seg_slot, tokens, length):
+            """One slot.  seg_slot: cache segments sliced to B=1 and zeroed.
+            tokens: [1, Tpad]; length: real length (static via bucket)."""
+            cache = {"index": jnp.zeros((), jnp.int32), "segments": seg_slot}
+            h, new_cache, _ = transformer.forward(
+                params, tokens, cfg_, cache=cache)
+            last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+            logits = transformer.logits_fn(params, last, cfg_)
+            return logits[:, 0], new_cache["segments"]
+
+        self._prefill_jit = jax.jit(_prefill, static_argnames=())
+
+        def _decode(params, cache, last_tokens, positions):
+            """All slots, one token each, per-slot positions (vmap)."""
+            def one(seg, tok, pos):
+                # vmap strips the slot axis (axis 1 of [n_rep, B, ...]);
+                # re-insert a B=1 batch dim for the model, squeeze it after.
+                seg = jax.tree.map(lambda x: jnp.expand_dims(x, 1), seg)
+                c = {"index": pos, "segments": seg}
+                h, nc, _ = transformer.forward(
+                    params, tok[None, None], cfg_, cache=c)
+                logits = transformer.logits_fn(params, h, cfg_)[0, 0]
+                return logits, jax.tree.map(lambda x: jnp.squeeze(x, 1),
+                                            nc["segments"])
+
+            seg_axes = jax.tree.map(lambda _: 1, cache["segments"])
+            logits, new_segs = jax.vmap(
+                one, in_axes=(seg_axes, 0, 0), out_axes=(0, seg_axes))(
+                    cache["segments"], last_tokens, positions)
+            return logits, {"index": cache["index"], "segments": new_segs}
+
+        self._decode_jit = jax.jit(_decode)
+
+    # ------------------------------------------------------------ plumbing
+    def submit(self, req: Request):
+        if len(req.prompt) > self.ecfg.max_prompt:
+            raise ValueError("prompt longer than engine max_prompt")
+        if len(req.prompt) < 1:
+            raise ValueError("empty prompt")
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            T = len(req.prompt)
+            Tpad = min(_next_pow2(T), self.ecfg.max_prompt) \
+                if self._pad_prefill else T
+            toks = np.zeros((1, Tpad), np.int32)
+            toks[0, :T] = req.prompt
+            # fresh zero sub-cache for the slot (kills stale recurrent state)
+            seg_slot = jax.tree.map(
+                lambda c: jnp.zeros((c.shape[0], 1) + c.shape[2:], c.dtype),
+                self.cache["segments"])
+            logits, new_seg = self._prefill_jit(
+                self.params, seg_slot, jnp.asarray(toks),
+                jnp.asarray(T, jnp.int32))
+            # scatter the slot back into the batched cache
+            self.cache["segments"] = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                    full, new.astype(full.dtype), slot, axis=1),
+                self.cache["segments"], new_seg)
+            tok = self._sample(logits[0], req)
+            self.slot_req[slot] = req
+            req.output.append(int(tok))
+            self.slot_pos[slot] = T
+            self.slot_last[slot] = int(tok)
+            self.stats["prefill_calls"] += 1
+            self.stats["tokens_out"] += 1
+
+    def _sample(self, logits, req: Request):
+        if req.temperature <= 0:
+            return int(jnp.argmax(logits))
+        key = jax.random.PRNGKey(req.seed + len(req.output))
+        return int(jax.random.categorical(key, logits / req.temperature))
+
+    def _retire(self):
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            hit_eos = (self.ecfg.eos_id >= 0 and req.output
+                       and req.output[-1] == self.ecfg.eos_id)
+            full = self.slot_pos[i] + 1 >= self.ecfg.max_len
+            if len(req.output) >= req.max_new_tokens or hit_eos or full:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[i] = None
+
+    # ------------------------------------------------------------ main loop
+    def step(self) -> bool:
+        """One engine iteration: retire → admit → batched decode."""
+        self._retire()
+        self._admit()
+        if not any(r is not None for r in self.slot_req):
+            return False
+        logits, self.cache = self._decode_jit(
+            self.params, self.cache, jnp.asarray(self.slot_last),
+            jnp.asarray(self.slot_pos))
+        self.stats["decode_steps"] += 1
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = self._sample(logits[i], req)
+            req.output.append(tok)
+            self.slot_pos[i] += 1
+            self.slot_last[i] = tok
+            self.stats["tokens_out"] += 1
+        return True
+
+    def run(self, max_iters: int = 100_000):
+        it = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and it < max_iters:
+            self.step()
+            it += 1
+        self._retire()
+        done, self.finished = self.finished, []
+        return done

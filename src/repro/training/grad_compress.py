@@ -1,0 +1,89 @@
+"""Log-quantized gradient compression with error feedback — the paper's
+6-bit base-√2 codes applied beyond the paper, to the data-parallel
+all-reduce.
+
+Mechanism (EF-SGD style):
+    acc   = grad + error                       # fold in residual
+    q     = log_dequantize(log_quantize(acc))  # 7-bit wire format (6+sign)
+    error = acc - q                            # kept locally, fp32
+    return q                                   # what crosses the network
+
+The all-reduce then moves 7-bit codes (+ one fp32 scale per tensor) instead
+of 32/16-bit floats — a 4.6×/2.3× cut of the collective roofline term on
+slow cross-pod links.  On real hardware the psum happens over *decoded*
+values (log codes are not additive); GSPMD sees the decoded tensor, so this
+transform is sharding-transparent: we model the wire win in
+analysis/roofline.py via `wire_bytes_fraction`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.logquant import DEFAULT, LogQuantConfig, log_dequantize, \
+    log_quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    enabled: bool = True
+    qcfg: LogQuantConfig = DEFAULT
+    min_size: int = 1024     # tiny tensors (norm scales) go uncompressed
+
+
+CompressorState = dict  # {"error": pytree of fp32 residuals}
+
+
+def _compressible(leaf, cfg: CompressorConfig) -> bool:
+    return leaf.size >= cfg.min_size
+
+
+def compressor_init(params, cfg: CompressorConfig = CompressorConfig()) \
+        -> CompressorState:
+    err = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32)
+        if _compressible(p, cfg) else jnp.zeros((), jnp.float32), params)
+    return {"error": err}
+
+
+def compress_decompress(g, cfg: LogQuantConfig = DEFAULT):
+    """Round-trip one tensor through the wire format (fp32 in/out)."""
+    packed, scale = log_quantize(g.astype(jnp.float32), cfg)
+    return log_dequantize(packed, scale, cfg, dtype=jnp.float32)
+
+
+def log_compress_gradients(grads, state: CompressorState,
+                           cfg: CompressorConfig = CompressorConfig()):
+    """Apply EF log-compression leaf-wise.  Returns (grads', state')."""
+    if not cfg.enabled:
+        return grads, state
+
+    def leaf(g, e):
+        if not _compressible(g, cfg):
+            return g.astype(jnp.float32), e
+        acc = g.astype(jnp.float32) + e
+        q = compress_decompress(acc, cfg.qcfg)
+        return q, acc - q
+
+    flat = jax.tree.map(leaf, grads, state["error"])
+    new_g = jax.tree.map(lambda pair: pair[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda pair: pair[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, {"error": new_e}
+
+
+def make_compressor(params, enabled: bool = True,
+                    qcfg: LogQuantConfig = DEFAULT, min_size: int = 1024):
+    cfg = CompressorConfig(enabled=enabled, qcfg=qcfg, min_size=min_size)
+    return compressor_init(params, cfg), \
+        lambda g, s: log_compress_gradients(g, s, cfg)
+
+
+def wire_bytes_fraction(qcfg: LogQuantConfig = DEFAULT,
+                        ref_bits: int = 32) -> float:
+    """Fraction of all-reduce bytes left on the wire after compression."""
+    return (qcfg.storage_bits) / ref_bits

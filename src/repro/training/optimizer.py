@@ -1,0 +1,116 @@
+"""Optimizers in pure JAX: AdamW, SGD(+momentum), LR schedules, clipping.
+
+Everything is a (init, update) pair over pytrees so it composes with pjit —
+optimizer state inherits each parameter's sharding via GSPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"               # adamw | sgd
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"          # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+
+
+# -------------------------------------------------------------- schedules
+def lr_at(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+            * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+# -------------------------------------------------------------- clipping
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# -------------------------------------------------------------- AdamW
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    count = state["count"] + 1
+    lr = lr_at(cfg, count - 1)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["mu"], grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["nu"], grads)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}
+
+
+# -------------------------------------------------------------- SGD
+def sgd_init(params):
+    return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(cfg: OptimizerConfig, grads, state, params):
+    count = state["count"] + 1
+    lr = lr_at(cfg, count - 1)
+    mom = jax.tree.map(
+        lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+        state["mom"], grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32)
+                      - lr * (m + cfg.weight_decay * p.astype(jnp.float32))
+                      ).astype(p.dtype),
+        params, mom)
+    return new_params, {"mom": mom, "count": count}
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, lambda g, s, p: adamw_update(cfg, g, s, p)
+    if cfg.name == "sgd":
+        return sgd_init, lambda g, s, p: sgd_update(cfg, g, s, p)
+    raise ValueError(cfg.name)

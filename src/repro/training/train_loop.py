@@ -1,0 +1,124 @@
+"""Training loop: grad-accumulation microbatching, metrics, hooks,
+checkpoint integration.  Model-agnostic — works for every assigned arch and
+the CNN substrate via a `loss_fn(params, batch) -> (loss, metrics)`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .grad_compress import CompressorConfig, compressor_init, \
+    log_compress_gradients
+from .optimizer import OptimizerConfig, clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptimizerConfig = OptimizerConfig()
+    microbatches: int = 1            # grad accumulation factor
+    grad_compress: bool = False      # log-quant EF compression
+    log_every: int = 10
+    ckpt_every: int = 0              # 0 = never
+    xent_chunk: int = 512
+
+
+TrainState = dict  # {"params", "opt", "compress", "step"}
+
+
+def init_train_state(params, cfg: TrainConfig) -> TrainState:
+    opt_init, _ = make_optimizer(cfg.opt)
+    state = {"params": params, "opt": opt_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.grad_compress:
+        state["compress"] = compressor_init(params)
+    return state
+
+
+def make_train_step(loss_fn: Callable, cfg: TrainConfig):
+    """loss_fn(params, microbatch) -> (loss, metrics dict of scalars).
+
+    The returned step takes (state, batch) where batch leaves have leading
+    dim = microbatches × per-micro batch; accumulation runs as a scan so
+    peak activation memory is one microbatch.
+    """
+    _, opt_update = make_optimizer(cfg.opt)
+    ccfg = CompressorConfig(enabled=cfg.grad_compress)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch):
+        params = state["params"]
+        if cfg.microbatches > 1:
+            def split(x):
+                mb = cfg.microbatches
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                loss, _, g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_sum + loss), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, gsum)
+            loss = loss_sum / cfg.microbatches
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if cfg.grad_compress:
+            grads, new_comp = log_compress_gradients(
+                grads, state["compress"], ccfg)
+
+        grads, gnorm = clip_by_global_norm(grads, cfg.opt.grad_clip)
+        new_params, new_opt = opt_update(grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if cfg.grad_compress:
+            new_state["compress"] = new_comp
+        out_metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return new_state, out_metrics
+
+    return step
+
+
+def train(loss_fn, params, loader, cfg: TrainConfig, *, num_steps: int,
+          start_step: int = 0, state: TrainState | None = None,
+          hooks: list[Callable] | None = None, jit: bool = True,
+          donate: bool = True):
+    """Run `num_steps` steps.  Returns (state, history).
+
+    hooks: callables (step:int, state, metrics:dict) -> None, run on host
+    every cfg.log_every steps (checkpointing, straggler heartbeats, …).
+    """
+    state = state if state is not None else init_train_state(params, cfg)
+    step_fn = make_train_step(loss_fn, cfg)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, start_step + num_steps):
+        batch = loader.batch(step) if hasattr(loader, "batch") \
+            else next(loader)
+        state, metrics = step_fn(state, batch)
+        if cfg.log_every and (step % cfg.log_every == 0
+                              or step == start_step + num_steps - 1):
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = step
+            metrics["wall_s"] = time.perf_counter() - t0
+            history.append(metrics)
+            for h in (hooks or []):
+                h(step, state, metrics)
+    return state, history

@@ -1,0 +1,59 @@
+"""Smoke + numerics tests for the CNN substrate (paper's own workload)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.neuromax_cnn import CONFIG
+from repro.models.cnn import CNNS, cnn_loss, make_cnn
+
+RED = CONFIG.reduced()
+
+
+@pytest.mark.parametrize("name", sorted(CNNS))
+def test_cnn_forward_shapes_and_finiteness(name):
+    key = jax.random.PRNGKey(0)
+    params, apply_fn = make_cnn(name, key, n_classes=RED.n_classes,
+                                width_mult=RED.width_mult)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, RED.img, RED.img, 3))
+    logits = apply_fn(params, x)
+    assert logits.shape == (2, RED.n_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+@pytest.mark.parametrize("name", ["vgg16", "mobilenet_v1"])
+def test_cnn_logq6_close_to_fp(name):
+    """Fake log-quant numerics stay within the base-√2 error envelope."""
+    key = jax.random.PRNGKey(2)
+    params, apply_fp = make_cnn(name, key, n_classes=10, width_mult=0.25)
+    _, apply_q = make_cnn(name, key, n_classes=10, width_mult=0.25,
+                          quant="logq6")
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 3))
+    lf = np.asarray(apply_fp(params, x))
+    lq = np.asarray(apply_q(params, x))
+    assert np.all(np.isfinite(lq))
+    # logits correlate strongly (quant noise, not garbage)
+    c = np.corrcoef(lf.ravel(), lq.ravel())[0, 1]
+    assert c > 0.9
+
+
+def test_cnn_train_step_reduces_loss():
+    key = jax.random.PRNGKey(4)
+    params, apply_fn = make_cnn("squeezenet", key, n_classes=4,
+                                width_mult=0.25, quant="logq6")
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 32, 32, 3))
+    y = jnp.arange(8) % 4
+    batch = {"images": x, "labels": y}
+
+    @jax.jit
+    def step(p):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: cnn_loss(apply_fn, pp, batch), has_aux=True)(p)
+        return loss, jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+
+    loss0, params = step(params)
+    for _ in range(10):
+        loss, params = step(params)
+    assert float(loss) < float(loss0)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,72 @@
+"""Analytical dataflow model vs the paper's §6 aggregate claims."""
+
+import pytest
+
+from repro.core.accelerator import run_network
+from repro.core.cost_model import (area_overhead_vs_linear,
+                                   cost_adjusted_pe_count,
+                                   peak_throughput_per_pe)
+from repro.core.dataflow import (PEAK_GOPS_PAPER, LayerSpec, analyze_layer)
+
+
+def test_vgg16_utilization_and_throughput():
+    """Fig 19a/20: VGG16 ≈95 % util → ≈308 GOPS; Table 3: ≈240 ms."""
+    perf = run_network("vgg16")
+    assert 0.92 <= perf.mean_layer_utilization <= 0.97, perf.mean_layer_utilization
+    assert abs(perf.throughput_gops_paper - 307.8) < 12.0
+    assert abs(perf.latency_ms - 240.23) < 25.0  # aggregate model, ±10 %
+
+
+def test_mobilenet_utilization():
+    """Fig 19b/20: MobileNet v1 ≈83-84 % util."""
+    perf = run_network("mobilenet_v1")
+    assert 0.76 <= perf.mean_layer_utilization <= 0.92, perf.mean_layer_utilization
+
+
+def test_resnet34_utilization():
+    """Fig 19c/20: ResNet-34 ≈86-87 % util."""
+    perf = run_network("resnet34")
+    assert 0.80 <= perf.mean_layer_utilization <= 0.95, perf.mean_layer_utilization
+
+
+def test_first_layer_3ch_is_50pct():
+    """§6: VGG16 conv1_1 has 3 input channels → 3 of 6 matrices idle."""
+    l = analyze_layer(LayerSpec("c", "conv", 224, 224, 3, 64, K=3, pad=1))
+    assert abs(l.utilization - 0.5) < 0.02
+
+
+def test_stride2_halves_utilization():
+    s1 = analyze_layer(LayerSpec("a", "conv", 112, 112, 64, 64, K=3, stride=1, pad=1))
+    s2 = analyze_layer(LayerSpec("b", "conv", 112, 112, 64, 64, K=3, stride=2, pad=1))
+    assert s2.utilization < 0.62 * s1.utilization
+
+
+def test_pwconv_high_util_when_divisible():
+    l = analyze_layer(LayerSpec("p", "pwconv", 12, 6, 18, 4, K=1))
+    assert l.utilization > 0.99
+
+
+def test_psum_storage_fraction():
+    l = analyze_layer(LayerSpec("c", "conv", 224, 224, 64, 64, K=3, pad=1))
+    assert l.stored_psum_frac <= 3 / 18  # ≈11-17 % vs ~50 % in prior work
+
+
+def test_ddr_traffic_log_vs_fp16():
+    """7-bit codes cut off-chip traffic ≈2.3× vs fp16."""
+    perf = run_network("vgg16")
+    ratio = perf.ddr_bytes_fp16 / perf.ddr_bytes_log
+    assert 2.0 < ratio < 2.5
+
+
+def test_cost_model_anchors():
+    assert cost_adjusted_pe_count() == 122  # Table 2 'PE number (adjusted)'
+    assert abs(peak_throughput_per_pe() - 324 / 122) < 1e-9  # ≈2.66 ('2.7')
+    assert peak_throughput_per_pe(adjusted=False) == 3.0  # +200 % peak/PE
+    assert 0.04 < area_overhead_vs_linear() < 0.11  # '6 % area overhead'
+
+
+def test_throughput_equals_util_times_peak():
+    """Table 2 / Fig 20 accounting: GOPS = util × 324 exactly."""
+    perf = run_network("resnet34")
+    assert abs(perf.throughput_gops_paper -
+               perf.mean_layer_utilization * PEAK_GOPS_PAPER) < 1e-9

@@ -1,0 +1,66 @@
+"""flash_attention Pallas kernel + blockwise jnp vs full-softmax oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import attention
+from repro.kernels.ref import ref_attention
+
+
+def _mk(b, tq, tk, h, hkv, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, tq, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, tk, hkv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, tk, hkv, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,h,hkv,d,window", [
+    (1, 128, 4, 4, 64, None),     # MHA causal
+    (2, 256, 8, 2, 64, None),     # GQA
+    (1, 256, 4, 1, 64, 64),       # MQA + sliding window (gemma3 local)
+    (1, 130, 4, 2, 64, None),     # ragged T
+])
+def test_pallas_attention_matches_ref(b, t, h, hkv, d, window, dtype):
+    q, k, v = _mk(b, t, t, h, hkv, d, dtype)
+    got = attention(q, k, v, causal=True, window=window, impl="pallas",
+                    interpret=True)
+    want = ref_attention(q, k, v, causal=True, window=window)
+    rtol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("window", [None, 32])
+def test_blockwise_attention_matches_ref(window):
+    q, k, v = _mk(2, 96, 96, 4, 2, 32, jnp.float32, seed=2)
+    got = attention(q, k, v, causal=True, window=window, impl="blockwise",
+                    block_k=32)
+    want = ref_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_q_offset():
+    """Single-token decode: q at position Tk-1 must equal full-prefill row."""
+    b, t, h, d = 1, 64, 4, 32
+    q, k, v = _mk(b, t, t, h, h, d, jnp.float32, seed=3)
+    full = ref_attention(q, k, v, causal=True)
+    last = attention(q[:, -1:], k, v, causal=True, q_offset=t - 1,
+                     impl="blockwise", block_k=16)
+    np.testing.assert_allclose(np.asarray(last[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    last_p = attention(q[:, -1:], k, v, causal=True, q_offset=t - 1,
+                       impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(last_p[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_window_equals_full_when_large():
+    q, k, v = _mk(1, 64, 64, 2, 2, 32, jnp.float32, seed=4)
+    a = attention(q, k, v, causal=True, window=4096, impl="blockwise")
+    b_ = attention(q, k, v, causal=True, window=None, impl="blockwise")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5)

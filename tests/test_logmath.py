@@ -1,0 +1,63 @@
+"""Bit-exactness of the LUT+shift thread (eq. 8) vs the closed form (eq. 5)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.logmath import LogPEThread, log_product_fixed, make_frac_lut
+
+
+def test_lut_contents_n1():
+    # n=1 → 2 entries: 2^0 and 2^0.5 in fixed point (paper: "store 2 values")
+    lut = make_frac_lut(frac_bits=1, out_frac_bits=12)
+    assert lut[0] == 1 << 12
+    assert lut[1] == round(2 ** 0.5 * (1 << 12))
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(-32, 31), st.integers(-32, 31),
+       st.sampled_from([-1, 1]))
+def test_shift_lut_matches_closed_form(wc, ac, sign):
+    """|LUT(FRAC)>>¬INT  −  2^(g/2)| within fixed-point rounding bounds."""
+    th = LogPEThread(frac_bits=1, out_frac_bits=20)
+    v = th(wc, ac, sign)
+    exact = th.closed_form(wc, ac, sign)
+    # one LUT rounding (≤ 0.5 ulp at 2^20) scaled by 2^INT, plus shift floor
+    g = wc + ac
+    int_part = g >> 1
+    tol = (0.5 * 2.0 ** max(int_part, 0) + 1.0) / (1 << 20) + \
+          (2.0 ** int_part) * 1e-6
+    assert abs(th.to_float(v) - exact) <= tol + abs(exact) * 1e-4
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(-16, 15), st.integers(-16, 15))
+def test_nonnegative_shift_is_exact(wc, ac):
+    """When INT(g) ≥ 0 the only error is the single LUT rounding."""
+    th = LogPEThread(frac_bits=1, out_frac_bits=12)
+    g = wc + ac
+    if g < 0:
+        return
+    v = th(wc, ac, 1)
+    exact = th.closed_form(wc, ac, 1)
+    assert abs(th.to_float(v) - exact) <= 0.5 * 2.0 ** (g >> 1) / (1 << 12)
+
+
+def test_zero_operand_gates_to_zero():
+    th = LogPEThread()
+    assert th(5, 3, 1, a_nonzero=False) == 0
+    assert th(5, 3, 1, w_nonzero=False) == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(-20, 20), st.integers(-20, 20), st.integers(-20, 20))
+def test_code_add_is_log_product(wc, ac, bc):
+    """(w·a)·b and w·(a·b) agree in the log domain: code adds commute."""
+    assert log_product_fixed(wc + ac, bc, 1, 1, 16) == \
+        log_product_fixed(wc, ac + bc, 1, 1, 16)
+
+
+def test_base2_mode():
+    """n=0 → base-2: LUT has a single entry, product is a pure shift."""
+    th = LogPEThread(frac_bits=0, out_frac_bits=8)
+    assert th(3, 2, 1) == (1 << 8) << 5
+    assert th(-3, 1, -1) == -((1 << 8) >> 2)

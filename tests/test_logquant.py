@@ -1,0 +1,126 @@
+"""Unit + property tests for base-√2 log quantization (paper §3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.logquant import (LogQuantConfig, fake_log_quant,
+                                 linear_quantize, log_dequantize,
+                                 log_quantize, quantization_snr_db,
+                                 quantize_tensor, unpack)
+
+CFG = LogQuantConfig(per_channel=False)
+
+
+def test_roundtrip_exact_powers():
+    # values exactly on the √2 grid must round-trip exactly
+    codes = np.arange(CFG.code_min, 1)
+    x = 2.0 ** (codes / CFG.steps)
+    packed, scale = log_quantize(jnp.asarray(x, jnp.float32), CFG)
+    deq = log_dequantize(packed, scale, CFG)
+    np.testing.assert_allclose(np.asarray(deq), x, rtol=1e-5)  # fp32 exp2
+
+
+def test_sign_and_zero():
+    x = jnp.asarray([-1.0, 0.0, 1.0, -0.25, 0.5], jnp.float32)
+    packed, scale = log_quantize(x, CFG)
+    deq = np.asarray(log_dequantize(packed, scale, CFG))
+    assert deq[1] == 0.0
+    assert deq[0] == -deq[2]
+    assert np.all(np.sign(deq) == np.sign(np.asarray(x)))
+
+
+def test_relative_error_bound():
+    # base-√2 rounding → magnitude error ≤ 2^(1/4) - 1 ≈ 18.9 % relative
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=4096).astype(np.float32)
+    packed, scale = log_quantize(jnp.asarray(x), CFG)
+    deq = np.asarray(log_dequantize(packed, scale, CFG))
+    nz = np.abs(x) > float(scale) * 2.0 ** (CFG.code_min / CFG.steps)
+    rel = np.abs(deq[nz] - x[nz]) / np.abs(x[nz])
+    assert rel.max() <= 2 ** 0.25 - 1 + 1e-3
+
+
+def test_base_sqrt2_beats_base2_snr():
+    """The paper's Fig-1 claim in SNR form: base √2 ≫ base 2."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(512, 512)).astype(np.float32) * 0.05
+    xq2 = log_dequantize(*log_quantize(jnp.asarray(w),
+                                       LogQuantConfig(frac_bits=0, per_channel=False)),
+                         LogQuantConfig(frac_bits=0, per_channel=False))
+    cfg_s2 = LogQuantConfig(frac_bits=1, per_channel=False)
+    p, s = log_quantize(jnp.asarray(w), cfg_s2)
+    xs2 = log_dequantize(p, s, cfg_s2)
+    snr2 = quantization_snr_db(w, np.asarray(xq2))
+    snr_s2 = quantization_snr_db(w, np.asarray(xs2))
+    assert snr_s2 > snr2 + 4.0  # ~6 dB better in practice
+
+
+def test_per_channel_scales():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(64, 8)).astype(np.float32)
+    w[:, 3] *= 100.0  # one hot channel
+    q = quantize_tensor(jnp.asarray(w), LogQuantConfig(per_channel=True))
+    deq = np.asarray(q.dequantize(jnp.float32))
+    rel = np.abs(deq - w) / np.maximum(np.abs(w), 1e-6)
+    assert np.median(rel) < 0.1  # hot channel does not wreck the others
+
+
+def test_fake_quant_straight_through_grad():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=32), jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(fake_log_quant(v, CFG) ** 2))(x)
+    # STE: grad = 2 * fq(x) exactly
+    np.testing.assert_allclose(np.asarray(g),
+                               2 * np.asarray(fake_log_quant(x, CFG)),
+                               rtol=1e-5)
+
+
+def test_linear_quantizer_clip():
+    x = jnp.asarray([-100.0, 0.3, 100.0])
+    q = np.asarray(linear_quantize(x, int_bits=3, frac_bits=2))
+    assert q[0] == -4.0 and q[2] == 4.0 - 0.25
+    assert abs(q[1] - 0.25) < 1e-6
+
+
+def test_packed_layout_matches_paper_sign_msb():
+    """Paper: w'[6] (the MSB above the 6-bit code) is the sign."""
+    x = jnp.asarray([0.5, -0.5], jnp.float32)
+    packed, _ = log_quantize(x, CFG)
+    p = np.asarray(packed).astype(np.int32)
+    assert (p[0] >> CFG.bits) & 1 == 0
+    assert (p[1] >> CFG.bits) & 1 == 1
+    assert (p[0] & ((1 << CFG.bits) - 1)) == (p[1] & ((1 << CFG.bits) - 1))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=64))
+def test_property_dequant_monotone_in_magnitude(vals):
+    """Quantization preserves sign and ordering of magnitudes (up to ties)."""
+    x = np.asarray(vals, np.float32)
+    packed, scale = log_quantize(jnp.asarray(x), CFG)
+    deq = np.asarray(log_dequantize(packed, scale, CFG))
+    # Sign preserved wherever the value is representable; magnitudes far
+    # below the code range may underflow to an exact 0 (paper's zero code).
+    nz = deq != 0
+    assert np.all(np.sign(deq[nz]) == np.sign(x[nz]))
+    if np.any(~nz):  # underflow only ever hits the smallest magnitudes
+        assert np.abs(x)[~nz].max() <= np.abs(x)[nz].min() if np.any(nz) else True
+    order = np.argsort(np.abs(x), kind="stable")
+    dq_sorted = np.abs(deq)[order]
+    assert np.all(np.diff(dq_sorted) >= -1e-7)  # non-decreasing
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2))
+def test_property_unpack_inverts_pack(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=128).astype(np.float32)
+    packed, scale = log_quantize(jnp.asarray(x), CFG)
+    code, sign, nz = unpack(packed, CFG)
+    deq = np.asarray(sign * jnp.where(nz, jnp.exp2(code / CFG.steps), 0) * scale)
+    np.testing.assert_allclose(
+        deq, np.asarray(log_dequantize(packed, scale, CFG)), rtol=1e-6)

@@ -1,0 +1,152 @@
+"""MoE dispatch unit tests: routing exactness, capacity drops, aux loss."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.moe import moe_ffn, moe_init
+
+
+def _cfg(**over):
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _dense_ref(p, x, cfg):
+    """Reference: route every token to its top-k experts, no capacity."""
+    B, T, D = x.shape
+    xt = np.asarray(x, np.float32).reshape(-1, D)
+    logits = xt @ np.asarray(p["router"], np.float32)
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = e / e.sum(-1, keepdims=True)
+    K = cfg.top_k
+    idx = np.argsort(-probs, axis=-1)[:, :K]
+    out = np.zeros_like(xt)
+    w1 = np.asarray(p["moe_w1"], np.float32)
+    w3 = np.asarray(p["moe_w3"], np.float32)
+    w2 = np.asarray(p["moe_w2"], np.float32)
+    for n in range(xt.shape[0]):
+        gv = probs[n, idx[n]]
+        gv = gv / gv.sum()
+        for j, ex in enumerate(idx[n]):
+            h = (xt[n] @ w1[ex])
+            h = h / (1 + np.exp(-h)) * (xt[n] @ w3[ex])  # silu gate
+            out[n] += gv[j] * (h @ w2[ex])
+    return out.reshape(B, T, D)
+
+
+def test_moe_matches_dense_reference_when_capacity_large():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 6, cfg.d_model)),
+                    jnp.float32)
+    y, aux = moe_ffn(p, x, cfg, capacity=12)
+    ref = _dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_capacity_drops_tokens():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 8, cfg.d_model)),
+                    jnp.float32)
+    y_full, _ = moe_ffn(p, x, cfg, capacity=32)
+    y_tight, _ = moe_ffn(p, x, cfg, capacity=1)
+    # tight capacity must change (drop) some outputs, and dropped tokens
+    # contribute zero rather than garbage
+    assert not np.allclose(np.asarray(y_full), np.asarray(y_tight))
+    assert np.all(np.isfinite(np.asarray(y_tight)))
+
+
+def test_aux_loss_prefers_balance():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(2), cfg)
+    E = cfg.n_experts
+    # force the router to send everything to expert 0 → aux should exceed
+    # the balanced router's aux
+    p_skew = dict(p)
+    skew = np.zeros(p["router"].shape, np.float32)
+    skew[:, 0] = 5.0
+    p_skew["router"] = p["router"] + jnp.asarray(skew)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(2, 16, cfg.d_model)),
+                    jnp.float32)
+    _, aux_bal = moe_ffn(p, x, cfg)
+    _, aux_skew = moe_ffn(p_skew, x, cfg)
+    assert float(aux_skew) > float(aux_bal)
+
+
+def test_decode_capacity_is_lossless():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(4), cfg)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(8, 1, cfg.d_model)),
+                    jnp.float32)
+    y, _ = moe_ffn(p, x, cfg)        # T==1 → capacity = N
+    ref = _dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_grouped_dispatch_matches_global():
+    """Grouped routing (G < N) must equal one-global-group routing when no
+    tokens are dropped (capacity ≥ per-group demand) — the §Perf grouped
+    dispatch is a layout change, not a semantics change."""
+    import repro.models.moe as moe_mod
+    from repro.configs.registry import get_config
+
+    cfg = get_config("granite-moe-1b-a400m").reduced(
+        n_layers=2, n_experts=4, top_k=2, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+
+    old = moe_mod.DEFAULT_GROUP
+    try:
+        moe_mod.DEFAULT_GROUP = 8          # N=16 → 2 groups
+        y_grouped, aux_g = moe_ffn(p, x, cfg)
+        moe_mod.DEFAULT_GROUP = 16         # one global group
+        y_global, aux_1 = moe_ffn(p, x, cfg)
+    finally:
+        moe_mod.DEFAULT_GROUP = old
+    np.testing.assert_allclose(np.asarray(y_grouped, np.float32),
+                               np.asarray(y_global, np.float32),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_g), float(aux_1), rtol=1e-5)
+
+
+def test_grouped_dispatch_every_kept_token_one_slot():
+    """Property: within a group, each expert slot holds ≤ 1 token and each
+    kept (token, k) choice occupies exactly 1 slot."""
+    import repro.models.moe as moe_mod
+    from repro.configs.registry import get_config
+
+    cfg = get_config("granite-moe-1b-a400m").reduced(
+        n_layers=2, n_experts=4, top_k=2, capacity_factor=1.0)
+    p = moe_init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, cfg.d_model))
+    # instrument: reproduce the dispatch computed inside moe_ffn
+    B, T, D = x.shape
+    N, E, K = B * T, cfg.n_experts, cfg.top_k
+    xt = x.reshape(N, D)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    _, gate_idx = jax.lax.top_k(probs, K)
+    G = 8
+    C = max(1, int(cfg.capacity_factor * G * K / E))
+    onehot = jax.nn.one_hot(gate_idx, E).reshape(N // G, G, K, E)
+    flat = onehot.reshape(N // G, G * K, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(N // G, G, K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)
+    keep = pos < C
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), C)
+    dispatch = jnp.einsum("gnke,gnkc->gnec", onehot,
+                          slot_oh * keep[..., None])
+    # each (expert, slot) pair holds at most one token
+    per_slot = np.asarray(jnp.sum(dispatch, axis=1))   # [n_g, E, C]
+    assert per_slot.max() <= 1.0 + 1e-6
+    # each kept (token, k) fills exactly one slot
+    filled = np.asarray(jnp.sum(dispatch, axis=(2, 3)))  # [n_g, G]
+    kept = np.asarray(jnp.sum(keep, axis=2))             # [n_g, G]
+    np.testing.assert_allclose(filled, kept, atol=1e-6)

@@ -1,0 +1,162 @@
+"""Checkpoint (save/restore/reshard/rotation/resume) + monitor tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.models.transformer import init_params, lm_loss
+from repro.runtime.checkpoint import (CheckpointManager, latest_step,
+                                      load_checkpoint, save_checkpoint)
+from repro.runtime.monitor import HeartbeatMonitor, RestartPolicy
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import TrainConfig, init_train_state, train
+
+
+def _state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "nested": {"b": jnp.ones((5,), jnp.bfloat16)}},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 7, state)
+    restored, step = load_checkpoint(str(tmp_path), state)
+    assert step == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, restored)
+    assert restored["params"]["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_load_into_abstract_template(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 3, state)
+    tpl = jax.eval_shape(lambda: state)
+    restored, _ = load_checkpoint(str(tmp_path), tpl)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_restore_reshards_onto_new_mesh(tmp_path):
+    """Save unsharded, restore sharded onto a 2-device mesh (elastic)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(str(tmp_path), 1, state)
+    # CPU test: 1 device — a trivial mesh still exercises the device_put path
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = load_checkpoint(str(tmp_path), state, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_manager_rotation_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, {"x": jnp.asarray(s)}, sync=True)
+    assert latest_step(str(tmp_path)) == 30
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2
+    restored, step = mgr.restore({"x": jnp.asarray(0)})
+    assert step == 30 and int(restored["x"]) == 30
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, _state())          # async
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _state())
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_train_resume_bitexact(tmp_path):
+    """Fault-tolerance end-to-end: train 6 steps straight vs train 3,
+    checkpoint, 'crash', restore, train 3 — identical final params."""
+    cfg = get_config("gemma-2b").reduced(n_layers=2, vocab=64, d_model=16,
+                                         d_ff=32, head_dim=8, n_heads=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: lm_loss(p, b, cfg, xent_chunk=8)
+    tcfg = TrainConfig(opt=OptimizerConfig(lr=1e-2, warmup_steps=0,
+                                           schedule="constant",
+                                           total_steps=10), log_every=1)
+    ld = ShardedLoader(DataConfig(seq_len=8, global_batch=2, vocab=64,
+                                  seed=1))
+
+    # train() donates state buffers — give each run its own params copy
+    fresh = lambda: init_params(cfg, jax.random.PRNGKey(0))
+    sA, _ = train(loss_fn, fresh(), ld, tcfg, num_steps=6)
+
+    sB, _ = train(loss_fn, fresh(), ld, tcfg, num_steps=3)
+    save_checkpoint(str(tmp_path), 3, sB)
+    tpl = jax.eval_shape(lambda: sB)
+    sB2, step = load_checkpoint(str(tmp_path), tpl)
+    sB2, _ = train(loss_fn, params, ld, tcfg, num_steps=3, start_step=step,
+                   state=sB2)
+
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), sA["params"], sB2["params"])
+
+
+# ------------------------------------------------------------------ monitor
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor([f"h{i}" for i in range(8)], window=4)
+    for step in range(4):
+        for i in range(8):
+            t = 1.0 if i != 5 else 3.5   # h5 is slow
+            mon.record(f"h{i}", step, t)
+    rep = mon.report(step=3)
+    assert list(rep.stragglers) == ["h5"]
+    assert not rep.missing
+
+
+def test_missing_host_detection():
+    clk = [0.0]
+    mon = HeartbeatMonitor(["a", "b"], miss_timeout_s=10.0,
+                           clock=lambda: clk[0])
+    mon.record("a", 0, 1.0)
+    mon.record("b", 0, 1.0)
+    clk[0] = 12.0
+    mon.record("a", 1, 1.0)
+    clk[0] = 20.0                    # b silent for 20s, a for only 8s
+    rep = mon.report(step=1)
+    assert rep.missing == ["b"]
+
+
+def test_restart_policy_restart_then_budget_abort():
+    clk = [0.0]
+    pol = RestartPolicy(budget=2, budget_window_s=100.0,
+                        clock=lambda: clk[0])
+    rep = lambda miss: type("R", (), {"missing": miss, "stragglers": {}})()
+    assert pol.decide(rep(["h1"]), 16)["action"] == "restart"
+    clk[0] = 1.0
+    assert pol.decide(rep(["h2"]), 16)["action"] == "restart"
+    clk[0] = 2.0
+    assert pol.decide(rep(["h3"]), 16)["action"] == "abort"
+    clk[0] = 200.0                   # budget window expired → allowed again
+    assert pol.decide(rep(["h4"]), 16)["action"] == "restart"
+
+
+def test_restart_policy_abort_below_min_hosts():
+    pol = RestartPolicy(min_hosts_fraction=0.75)
+    rep = type("R", (), {"missing": [f"h{i}" for i in range(8)],
+                         "stragglers": {}})()
+    assert pol.decide(rep, 16)["action"] == "abort"
+
+
+def test_restart_policy_exclude_stragglers():
+    pol = RestartPolicy()
+    rep = type("R", (), {"missing": [], "stragglers": {"h7": 9.0}})()
+    out = pol.decide(rep, 16)
+    assert out == {"action": "exclude", "hosts": ["h7"]}

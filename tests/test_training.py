@@ -1,0 +1,177 @@
+"""Data pipeline, optimizer, grad compression, and train-loop tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, ShardedLoader
+from repro.models.transformer import init_params, lm_loss
+from repro.training.grad_compress import (CompressorConfig, compressor_init,
+                                          compress_decompress,
+                                          log_compress_gradients)
+from repro.training.optimizer import (OptimizerConfig, clip_by_global_norm,
+                                      lr_at, make_optimizer)
+from repro.training.train_loop import (TrainConfig, init_train_state,
+                                       make_train_step, train)
+
+# ---------------------------------------------------------------- data
+
+
+def test_loader_deterministic_and_sharded():
+    base = dict(seq_len=16, global_batch=8, vocab=100, seed=7)
+    full = ShardedLoader(DataConfig(**base))
+    b0 = full.batch(3)
+    # exact resume: same (seed, step) → identical batch
+    np.testing.assert_array_equal(b0["tokens"],
+                                  ShardedLoader(DataConfig(**base))
+                                  .batch(3)["tokens"])
+    # host shards tile the global batch
+    shards = [ShardedLoader(DataConfig(**base, n_hosts=4, host_id=h)).batch(3)
+              for h in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([s["tokens"] for s in shards]), b0["tokens"])
+    assert b0["tokens"].max() < 100 and b0["tokens"].min() >= 0
+    # different steps differ
+    assert not np.array_equal(b0["tokens"], full.batch(4)["tokens"])
+
+
+def test_loader_memmap_roundtrip(tmp_path):
+    data = np.arange(17 * 10, dtype=np.int32) % 50
+    p = tmp_path / "toks.bin"
+    data.tofile(p)
+    ld = ShardedLoader(DataConfig(seq_len=16, global_batch=2, vocab=50,
+                                  source="memmap", path=str(p)))
+    b = ld.batch(0)
+    assert b["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# ---------------------------------------------------------------- optimizer
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(lr_at(cfg, s)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0           # warmup rises
+    assert abs(lrs[9] - 1.0) < 1e-6
+    assert lrs[-1] < 0.15                    # decays to ~min ratio
+    assert all(b <= a + 1e-9 for a, b in zip(lrs[9:], lrs[10:]))  # monotone
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 10.0) < 1e-5
+    cn = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                            for x in jax.tree.leaves(clipped))))
+    assert abs(cn - 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("name", ["adamw", "sgd"])
+def test_optimizer_descends_quadratic(name):
+    cfg = OptimizerConfig(name=name, lr=0.1, warmup_steps=0, total_steps=200,
+                          schedule="constant", weight_decay=0.0)
+    init, update = make_optimizer(cfg)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = init(params)
+    for _ in range(150):
+        grads = jax.tree.map(lambda p: 2 * p, params)  # d/dx x^2
+        params, state = update(grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 0.3
+
+
+# ---------------------------------------------------------------- compression
+
+
+def test_compress_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=4096).astype(np.float32))
+    q = compress_decompress(g)
+    rel = np.abs(np.asarray(q) - np.asarray(g)) / np.maximum(np.abs(g), 1e-9)
+    nz = np.abs(np.asarray(g)) > 1e-4 * np.abs(np.asarray(g)).max()
+    assert np.median(rel[nz]) < 0.1
+
+
+def test_error_feedback_preserves_mean_signal():
+    """EF compression: accumulated quantization error does not bias the sum
+    of applied gradients (the defining property of error feedback)."""
+    rng = np.random.default_rng(1)
+    true_g = rng.normal(size=2048).astype(np.float32) * 1e-2
+    grads = {"w": jnp.asarray(true_g)}
+    cfg = CompressorConfig()
+    state = compressor_init(grads, cfg)
+    applied = np.zeros_like(true_g)
+    for _ in range(30):
+        q, state = log_compress_gradients(grads, state, cfg)
+        applied += np.asarray(q["w"])
+    drift = np.abs(applied - 30 * true_g)
+    # residual is bounded by one quantization step, not growing with steps
+    assert drift.max() < np.abs(true_g).max() * 2.5
+
+
+def test_small_tensors_bypass_compression():
+    grads = {"scale": jnp.ones((8,)), "big": jnp.ones((4096,))}
+    cfg = CompressorConfig(min_size=1024)
+    state = compressor_init(grads, cfg)
+    q, _ = log_compress_gradients(grads, state, cfg)
+    np.testing.assert_array_equal(np.asarray(q["scale"]), np.ones((8,)))
+
+
+# ---------------------------------------------------------------- train loop
+
+
+def _tiny_setup(microbatches=1, grad_compress=False):
+    cfg = get_config("gemma-2b").reduced(n_layers=2, vocab=128, d_model=32,
+                                         d_ff=64, head_dim=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    loss_fn = lambda p, b: lm_loss(p, b, cfg, xent_chunk=16)
+    tcfg = TrainConfig(
+        opt=OptimizerConfig(lr=1e-2, warmup_steps=2, total_steps=50,
+                            schedule="constant"),
+        microbatches=microbatches, grad_compress=grad_compress, log_every=1)
+    ld = ShardedLoader(DataConfig(seq_len=16, global_batch=4, vocab=128,
+                                  seed=0))
+    return cfg, params, loss_fn, tcfg, ld
+
+
+def test_train_loop_loss_decreases():
+    _, params, loss_fn, tcfg, ld = _tiny_setup()
+    state, hist = train(loss_fn, params, ld, tcfg, num_steps=20)
+    assert int(state["step"]) == 20
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_grad_accumulation_matches_full_batch():
+    """microbatches=2 must produce the same update as one big batch."""
+    _, params, loss_fn, tcfg, ld = _tiny_setup()
+    batch = ld.batch(0)
+    s1 = init_train_state(params, tcfg)
+    s1, m1 = jax.jit(make_train_step(loss_fn, tcfg))(s1, batch)
+
+    tcfg2 = TrainConfig(opt=tcfg.opt, microbatches=2, log_every=1)
+    s2 = init_train_state(params, tcfg2)
+    s2, m2 = jax.jit(make_train_step(loss_fn, tcfg2))(s2, batch)
+
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=2e-4, atol=2e-5),
+        s1["params"], s2["params"])
+
+
+def test_train_loop_with_compression_still_learns():
+    _, params, loss_fn, tcfg, ld = _tiny_setup(grad_compress=True)
+    state, hist = train(loss_fn, params, ld, tcfg, num_steps=20)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_hooks_fire():
+    _, params, loss_fn, tcfg, ld = _tiny_setup()
+    seen = []
+    train(loss_fn, params, ld, tcfg, num_steps=5,
+          hooks=[lambda step, st, m: seen.append(step)])
+    assert seen == [0, 1, 2, 3, 4]
