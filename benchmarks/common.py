@@ -3,6 +3,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
@@ -10,6 +12,17 @@ def timed(fn):
     t0 = time.perf_counter()
     out = fn()
     return out, (time.perf_counter() - t0) * 1e6  # µs
+
+
+def write_json(filename: str, payload: dict) -> str:
+    """Persist a benchmark's result dict (e.g. ``BENCH_conv.json``) at the
+    repo root so runs are diffable across PRs.  Returns the path written."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    return path
 
 
 def fmt_table(rows: list[dict], cols: list[str]) -> str:

@@ -1,0 +1,112 @@
+"""Log-conv kernel timings across the paper's CNN layer shapes.
+
+Times `kernels/ops.conv2d` (blockwise jnp path, plus the Pallas kernel in
+interpret mode on the smallest layer as a correctness probe) against the
+fp32 `lax.conv` baseline, on VGG-16 / MobileNet-v1 layer shapes from
+`core/accelerator.py` scaled to a CI-sized image.  Emits ``BENCH_conv.json``
+at the repo root via `benchmarks/common.py`.
+
+On CPU the headline number is *overhead* of the decode-fused path vs fp32
+(interpret-mode Pallas is not a perf proxy); on TPU the same dispatch hits
+the MXU kernel where weight bytes moved drop 4× vs f32.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accelerator import mobilenet_v1_layers, vgg16_layers
+from repro.core.logquant import quantize_tensor
+from repro.kernels import ops
+
+from .common import fmt_table, write_json
+
+IMG = 32  # CI-sized spatial scale for the paper's 224px layer stacks
+
+
+def _bench(fn, *args, reps: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def _layer_cases():
+    vgg = {l.name: l for l in vgg16_layers(IMG)}
+    mbn = {l.name: l for l in mobilenet_v1_layers(IMG)}
+    picks = [("vgg16", vgg["CONV1_1"]), ("vgg16", vgg["CONV3_1"]),
+             ("mobilenet_v1", mbn["DW2"]), ("mobilenet_v1", mbn["PW2"])]
+    for net, spec in picks:
+        groups = spec.C if spec.kind == "dwconv" else 1
+        yield net, spec, groups
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    rows, ok = [], True
+    for net, spec, groups in _layer_cases():
+        H = W = spec.H
+        x = jnp.asarray(rng.normal(size=(1, H, W, spec.C))
+                        .astype(np.float32))
+        w = jnp.asarray(rng.normal(
+            size=(spec.K, spec.K, spec.C // groups, spec.P))
+            .astype(np.float32))
+        qt = quantize_tensor(w)
+        kw = dict(stride=spec.stride, padding=spec.pad, groups=groups)
+
+        base = jax.jit(lambda x, w: jax.lax.conv_general_dilated(
+            x, w, (spec.stride, spec.stride),
+            [(spec.pad, spec.pad)] * 2 if isinstance(spec.pad, int)
+            else spec.pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups))
+        bw = jax.jit(lambda x: ops.conv2d(x, qt, impl="blockwise", **kw))
+
+        us_fp = _bench(base, x, w)
+        us_bw = _bench(bw, x)
+        y_fp, y_bw = base(x, w), bw(x)
+        # quant error envelope, not a bitwise check: ~|w|·√2-halfstep
+        rel = float(jnp.linalg.norm(y_bw - y_fp) /
+                    (jnp.linalg.norm(y_fp) + 1e-9))
+        row_ok = rel < 0.2 and y_bw.shape == y_fp.shape
+        ok &= row_ok
+        rows.append({
+            "net": net, "layer": spec.name,
+            "shape": f"{H}x{W}x{spec.C}->{spec.P}",
+            "K": spec.K, "stride": spec.stride, "groups": groups,
+            "fp32_us": round(us_fp, 1), "logq_blockwise_us": round(us_bw, 1),
+            "overhead_x": round(us_bw / max(us_fp, 1e-9), 2),
+            "rel_quant_err": round(rel, 4), "ok": row_ok,
+        })
+
+    # Pallas interpret probe on the smallest layer (correctness, not speed)
+    net, spec, groups = next(iter(_layer_cases()))
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, spec.C)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, spec.C, 16))
+                    .astype(np.float32))
+    qt = quantize_tensor(w)
+    us_pl = _bench(lambda: ops.conv2d(x, qt, impl="pallas", interpret=True),
+                   reps=1)
+    d = float(jnp.max(jnp.abs(
+        ops.conv2d(x, qt, impl="pallas", interpret=True) -
+        ops.conv2d(x, qt, impl="blockwise"))))
+    pallas_ok = d < 1e-3
+    ok &= pallas_ok
+
+    print(fmt_table(rows, list(rows[0])))
+    print(f"pallas(interpret) probe: {us_pl:.0f} µs, "
+          f"|pallas - blockwise| = {d:.2e} "
+          f"({'OK' if pallas_ok else 'FAIL'})")
+    mean_over = float(np.mean([r["overhead_x"] for r in rows]))
+    out = {"rows": rows, "pallas_interpret_maxdiff": d,
+           "mean_blockwise_overhead_x": mean_over, "img": IMG, "ok": ok}
+    path = write_json("BENCH_conv.json", out)
+    print(f"wrote {path}")
+    return out

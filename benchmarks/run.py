@@ -11,13 +11,14 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import (ablation_grad_compress, fig1_quant, fig17_pe_cost,
-               fig19_utilization, fig20_throughput, table2_comparison,
-               table3_latency)
+from . import (ablation_grad_compress, conv_kernels, fig1_quant,
+               fig17_pe_cost, fig19_utilization, fig20_throughput,
+               table2_comparison, table3_latency)
 from .common import timed
 
 BENCHES = {
     "fig1_quant": (fig1_quant, "snr_gain_db"),
+    "conv_kernels": (conv_kernels, "mean_blockwise_overhead_x"),
     "fig17_pe_cost": (fig17_pe_cost, "tput_per_pe"),
     "fig19_utilization": (fig19_utilization, None),
     "fig20_throughput": (fig20_throughput, "adjusted_pes"),

@@ -22,12 +22,19 @@ Two compute modes:
   * mode="float": thread product = w·a in fp (isolates the dataflow wiring —
     bit-exact against a direct convolution);
   * mode="log":   thread product = the fixed-point LUT+shift of
-    `core.logmath.log_product_fixed` on log-quantized codes (bit-exact
-    against what the FPGA would produce).
+    `core.logmath` on log-quantized codes (bit-exact against what the FPGA
+    would produce).
 
-This model is intentionally plain numpy: it models hardware, not tensors.
-The TPU-native realisation of the same dataflow idea is
-`kernels/log_matmul.py`.
+The log mode is *vectorized by default*: every thread of a whole channel
+group's cycle is evaluated in one `LogPEThread.batch` numpy call (the same
+LUT+shift per element), which is what makes this oracle usable to
+cross-check the TPU kernels on realistic layer shapes in CI time.  Pass
+``vectorized=False`` to run the original one-Python-call-per-thread
+path — bit-identical, and the reference for the speedup test.
+
+This model is the bottom tier of the repo's three-tier conv stack
+(see README.md):  `kernels/log_conv2d.py` (Pallas kernel) ↔ its blockwise
+jnp fallback ↔ this hardware oracle.
 """
 
 from __future__ import annotations
@@ -89,6 +96,8 @@ class PEMatrix:
         Returns psums o[r, k] = Σ_dc window[r, dc] · w[k, dc]   — shape [6, 3].
         In log mode the per-thread products use the fixed-point LUT+shift and
         the psums are integer accumulations (adder-net-0 is a plain adder).
+        This is the per-scalar path; `cycle_psums_batch` is the vectorized
+        equivalent used by the grid.
         """
         if self.mode == "float":
             # p_{r, k*3+dc} = window[r, dc] * w[k, dc]; adder-net-0 row sum
@@ -108,23 +117,46 @@ class PEMatrix:
                 out[r, k] = acc
         return out
 
+    def cycle_psums_batch(self, windows: np.ndarray, ws: np.ndarray,
+                          window_codes=None, w_codes=None, w_signs=None):
+        """`cycle_psums` for a whole channel group at once.
+
+        windows: [nc, 6, 3]; ws: [nc, 3, 3] (one matrix per channel).
+        Returns per-matrix psums o[c, r, k] — shape [nc, 6, 3]; the caller
+        channel-accumulates (Fig. 13) or keeps them separate (depthwise).
+        """
+        if self.mode == "float":
+            return np.einsum("crd,ckd->crk", windows, ws)
+        prods = self.thread.batch(
+            w_codes[:, None, :, :], window_codes[:, :, None, :],
+            w_signs[:, None, :, :],
+            a_nonzero=(windows != 0)[:, :, None, :],
+            w_nonzero=(ws != 0)[:, None, :, :])      # [nc, r, k, dc]
+        return prods.sum(axis=3)
+
 
 class PEGrid:
     """The full 6-matrix grid with adder-net-1 + boundary shift registers."""
 
     def __init__(self, mode: str = "float",
                  quant_cfg: LogQuantConfig | None = None,
-                 out_frac_bits: int = 12):
+                 out_frac_bits: int = 12, vectorized: bool = True):
         self.mode = mode
         self.quant_cfg = quant_cfg or LogQuantConfig(per_channel=False)
         self.thread = LogPEThread(self.quant_cfg.frac_bits, out_frac_bits)
         self.matrix = PEMatrix(mode, self.thread)
+        self.vectorized = vectorized
 
     # -- log-domain helpers (host-side state-controller work) ---------------
     def _codes(self, x):
-        """Host-side log quantization of a tensor → (codes, signs, deq)."""
+        """Host-side log quantization of a tensor → (codes, signs, nonzero,
+        scale, dequantized)."""
         import jax.numpy as jnp
         from .logquant import log_quantize, unpack, log_dequantize
+        # the grid models one ⟨m,n⟩ grid per tensor (paper §3); a per-channel
+        # scale array would be silently collapsed to channel 0's scale below
+        assert not self.quant_cfg.per_channel, \
+            "PEGrid log mode needs LogQuantConfig(per_channel=False)"
         packed, scale = log_quantize(jnp.asarray(x, jnp.float32), self.quant_cfg)
         code, sign, nz = unpack(packed, self.quant_cfg)
         deq = log_dequantize(packed, scale, self.quant_cfg)
@@ -140,6 +172,8 @@ class PEGrid:
         psums are channel-accumulated (Fig. 13) before adder-net-1.
         """
         assert w.shape[0] == 3 and w.shape[1] == 3, "PE grid conv is 3x3"
+        if self.mode == "log" and self.vectorized:
+            return self._conv2d_log_vectorized(x, w, stride)
         H, W, C = x.shape
         P = w.shape[3]
         Ho = (H - 3) // stride + 1
@@ -148,9 +182,11 @@ class PEGrid:
         n_pos = W - 2  # column positions per band (stride handled at net-1)
         pos_step = stride
 
-        if self.mode == "log":
-            xc, xs, xnz, xscale, xdq = self._codes(x)
-            wc, ws, wnz, wscale, wdq = self._codes(w)
+        log_mode = self.mode == "log"
+        if log_mode:
+            xc, _, _, xscale, _ = self._codes(x)
+            wc, ws, _, wscale, _ = self._codes(w)
+            F = float(1 << self.thread.out_frac_bits)
         stats = GridStats()
         y = np.zeros((Ho, Wo, P), dtype=np.float64)
 
@@ -159,31 +195,35 @@ class PEGrid:
             for cg in range(n_cgroups):
                 ch0 = cg * N_MATRICES
                 chans = list(range(ch0, min(ch0 + N_MATRICES, C)))
+                # weight broadcast: per-matrix [3, 3] weight blocks for this
+                # (filter, channel-group) pass, loaded once (2D broadcast)
+                wmat = w[:, :, chans, p].transpose(2, 0, 1)        # [nc, 3, 3]
+                if log_mode:
+                    wcod = wc[:, :, chans, p].transpose(2, 0, 1)
+                    wsgn = ws[:, :, chans, p].transpose(2, 0, 1)
                 # boundary psum store: per output column j, the 3 psums
                 # (o_{4,0}, o_{5,0}, o_{5,1}) of the previous band (VAR-len SR)
                 sr = {}
                 for b in range(n_bands):
                     r0 = b * PE_ROWS
+                    rows = min(PE_ROWS, H - r0)
                     for j in range(0, n_pos, pos_step):
                         # channel-accumulated 18 psums for this (band, j)
                         o = np.zeros((PE_ROWS, PE_COLS), dtype=np.float64)
-                        for c in chans:
+                        for ci, c in enumerate(chans):
                             win = np.zeros((PE_ROWS, PE_COLS))
-                            rows = min(PE_ROWS, H - r0)
                             win[:rows] = x[r0:r0 + rows, j:j + 3, c]
-                            if self.mode == "float":
-                                o += self.matrix.cycle_psums(win, w[:, :, c, p])
+                            if not log_mode:
+                                o += self.matrix.cycle_psums(win, wmat[ci])
                             else:
-                                wcodes = wc[:, :, c, p]
-                                wsigns = ws[:, :, c, p]
-                                xcodes = np.zeros((PE_ROWS, PE_COLS), np.int64)
+                                xcodes = np.zeros((PE_ROWS, PE_COLS),
+                                                  np.int64)
                                 xcodes[:rows] = xc[r0:r0 + rows, j:j + 3, c]
                                 o_fx = self.matrix.cycle_psums(
-                                    win, w[:, :, c, p],
-                                    window_codes=xcodes, w_codes=wcodes,
-                                    w_signs=wsigns)
-                                o += o_fx / float(1 << self.thread.out_frac_bits) \
-                                    * xscale * wscale
+                                    win, wmat[ci],
+                                    window_codes=xcodes, w_codes=wcod[ci],
+                                    w_signs=wsgn[ci])
+                                o += o_fx / F * xscale * wscale
                         stats.cycles += 1
                         stats.total_psums += 18
                         stats.active_thread_cycles += \
@@ -216,6 +256,163 @@ class PEGrid:
         return y.astype(np.float32), stats
 
     # ------------------------------------------------------------------
+    def _conv2d_log_vectorized(self, x: np.ndarray, w: np.ndarray,
+                               stride: int = 1):
+        """Log-mode `conv2d` with every (channel-group, band) pass evaluated
+        as ONE `LogPEThread.batch` call over all column positions at once.
+
+        Numerically it is the scalar path exactly (same integer LUT+shift per
+        thread, same Fig-13 channel accumulation, same adder-net-1 wiring and
+        boundary shift registers, same GridStats counts) — only the Python
+        loop over (j, channel, PE row, PE col, thread) is collapsed into
+        numpy broadcasting, which is what makes oracle cross-checks on
+        realistic layer shapes possible in CI time (≫20× faster).
+        """
+        H, W, C = x.shape
+        P = w.shape[3]
+        Ho = (H - 3) // stride + 1
+        Wo = (W - 3) // stride + 1
+        n_bands = int(np.ceil(H / PE_ROWS))
+        n_pos = W - 2
+
+        xc, _, _, xscale, _ = self._codes(x)
+        wc, ws, _, wscale, _ = self._codes(w)
+        F = float(1 << self.thread.out_frac_bits)
+        stats = GridStats()
+        y = np.zeros((Ho, Wo, P), dtype=np.float64)
+
+        jj = np.arange(0, n_pos, stride)
+        jo = jj // stride   # stride-aligned and jo < Wo by construction
+        nj = len(jj)
+        # sliding 3-wide column windows over the full row range, once
+        xwin = np.lib.stride_tricks.sliding_window_view(x, 3, axis=1)
+        xcwin = np.lib.stride_tricks.sliding_window_view(xc, 3, axis=1)
+
+        n_cgroups = int(np.ceil(C / N_MATRICES))
+        for p in range(P):
+            for cg in range(n_cgroups):
+                ch0 = cg * N_MATRICES
+                chans = list(range(ch0, min(ch0 + N_MATRICES, C)))
+                nc = len(chans)
+                wmat = w[:, :, chans, p].transpose(2, 0, 1)      # [nc, 3, 3]
+                wcod = wc[:, :, chans, p].transpose(2, 0, 1)
+                wsgn = ws[:, :, chans, p].transpose(2, 0, 1)
+                sr = {}
+                for b in range(n_bands):
+                    r0 = b * PE_ROWS
+                    rows = min(PE_ROWS, H - r0)
+                    # windows for every column position: [nj, nc, 6, 3]
+                    win = np.zeros((nj, nc, PE_ROWS, PE_COLS))
+                    xcod = np.zeros((nj, nc, PE_ROWS, PE_COLS), np.int64)
+                    win[:, :, :rows] = \
+                        xwin[r0:r0 + rows, jj][:, :, chans].transpose(1, 2, 0, 3)
+                    xcod[:, :, :rows] = \
+                        xcwin[r0:r0 + rows, jj][:, :, chans].transpose(1, 2, 0, 3)
+                    prods = self.thread.batch(
+                        wcod[None, :, None, :, :], xcod[:, :, :, None, :],
+                        wsgn[None, :, None, :, :],
+                        a_nonzero=(win != 0)[:, :, :, None, :],
+                        w_nonzero=(wmat != 0)[None, :, None, :, :])
+                    # adder-net-0 (dc) then Fig-13 channel accumulate (nc)
+                    o = prods.sum(axis=(1, 4)) / F * xscale * wscale  # [nj,6,3]
+                    stats.cycles += nj
+                    stats.total_psums += 18 * nj
+                    stats.active_thread_cycles += \
+                        PE_ROWS * PE_COLS * THREADS * nc * nj
+                    # adder-net-1 for all columns at once
+                    for r in range(PE_ROWS - 2):
+                        ro = r0 + r
+                        if ro % stride or ro // stride >= Ho:
+                            continue
+                        val = o[:, r, 0] + o[:, r + 1, 1] + o[:, r + 2, 2]
+                        y[ro // stride, jo, p] += val
+                        stats.useful_macs += 9 * nc * nj
+                    if r0 + PE_ROWS < H:
+                        sr[b] = (o[:, 4, 0], o[:, 5, 0], o[:, 5, 1])
+                        stats.stored_psums += 3 * nj
+                    if b > 0 and b - 1 in sr:
+                        o40, o50, o51 = sr.pop(b - 1)
+                        for ro, val in (
+                            (r0 - 2, o40 + o51 + o[:, 0, 2]),
+                            (r0 - 1, o50 + o[:, 0, 1] + o[:, 1, 2]),
+                        ):
+                            if ro % stride or ro // stride >= Ho:
+                                continue
+                            y[ro // stride, jo, p] += val
+                            stats.useful_macs += 9 * nc * nj
+        return y.astype(np.float32), stats
+
+    # ------------------------------------------------------------------
+    def conv2d_depthwise(self, x: np.ndarray, w: np.ndarray, stride: int = 1):
+        """x: [H, W, C]; w: [3, 3, C] (one 3×3 filter per channel). Valid pad.
+
+        MobileNet's dwconv on the grid: each matrix still owns one channel,
+        but there is **no** Fig-13 channel accumulation — matrix c's
+        adder-net-1 output IS output channel c.  Returns (y [Ho, Wo, C],
+        GridStats).  Always vectorized over all channels per (band, j).
+        """
+        assert w.shape[:2] == (3, 3) and w.shape[2] == x.shape[2]
+        H, W, C = x.shape
+        Ho = (H - 3) // stride + 1
+        Wo = (W - 3) // stride + 1
+        n_bands = int(np.ceil(H / PE_ROWS))
+        n_pos = W - 2
+        n_cgroups = int(np.ceil(C / N_MATRICES))
+
+        log_mode = self.mode == "log"
+        wmat = w.transpose(2, 0, 1)                              # [C, 3, 3]
+        if log_mode:
+            xc, _, _, xscale, _ = self._codes(x)
+            wc, wsg, _, wscale, _ = self._codes(w)
+            wcod = wc.transpose(2, 0, 1)
+            wsgn = wsg.transpose(2, 0, 1)
+            F = float(1 << self.thread.out_frac_bits)
+        stats = GridStats()
+        y = np.zeros((Ho, Wo, C), dtype=np.float64)
+        sr = {}
+        for b in range(n_bands):
+            r0 = b * PE_ROWS
+            rows = min(PE_ROWS, H - r0)
+            for j in range(0, n_pos, stride):
+                win = np.zeros((C, PE_ROWS, PE_COLS))
+                win[:, :rows] = x[r0:r0 + rows, j:j + 3, :].transpose(2, 0, 1)
+                if log_mode:
+                    xcod = np.zeros((C, PE_ROWS, PE_COLS), np.int64)
+                    xcod[:, :rows] = \
+                        xc[r0:r0 + rows, j:j + 3, :].transpose(2, 0, 1)
+                    o_fx = self.matrix.cycle_psums_batch(
+                        win, wmat, window_codes=xcod, w_codes=wcod,
+                        w_signs=wsgn)
+                    o = o_fx / F * xscale * wscale               # [C, 6, 3]
+                else:
+                    o = self.matrix.cycle_psums_batch(win, wmat)
+                stats.cycles += n_cgroups
+                stats.total_psums += 18 * n_cgroups
+                stats.active_thread_cycles += PE_ROWS * PE_COLS * THREADS * C
+                jo = j // stride     # < Wo since j ranges over [0, W-2)
+                for r in range(PE_ROWS - 2):
+                    ro = r0 + r
+                    if ro % stride or ro // stride >= Ho:
+                        continue
+                    y[ro // stride, jo, :] += \
+                        o[:, r, 0] + o[:, r + 1, 1] + o[:, r + 2, 2]
+                    stats.useful_macs += 9 * C
+                if r0 + PE_ROWS < H:
+                    sr[(b, j)] = (o[:, 4, 0], o[:, 5, 0], o[:, 5, 1])
+                    stats.stored_psums += 3 * C
+                if b > 0 and (b - 1, j) in sr:
+                    o40, o50, o51 = sr.pop((b - 1, j))
+                    for ro, val in (
+                        (r0 - 2, o40 + o51 + o[:, 0, 2]),
+                        (r0 - 1, o50 + o[:, 0, 1] + o[:, 1, 2]),
+                    ):
+                        if ro % stride or ro // stride >= Ho:
+                            continue
+                        y[ro // stride, jo, :] += val
+                        stats.useful_macs += 9 * C
+        return y.astype(np.float32), stats
+
+    # ------------------------------------------------------------------
     def conv2d_1x1(self, x: np.ndarray, w: np.ndarray):
         """x: [H, W, C]; w: [C, P].  Channel-parallel mapping of §5.2:
 
@@ -224,10 +421,14 @@ class PEGrid:
         H, W, C = x.shape
         P = w.shape[1]
         stats = GridStats()
-        if self.mode == "log":
-            xc, xs, xnz, xscale, xdq = self._codes(x)
-            wc, ws, wnz, wscale, wdq = self._codes(w)
-            x_eff = None
+        log_mode = self.mode == "log"
+        if log_mode:
+            xc, _, _, xscale, _ = self._codes(x)
+            wc, ws, _, wscale, _ = self._codes(w)
+            wcf = wc.reshape(C, P)
+            wsf = ws.reshape(C, P)
+            xcf = xc.reshape(H * W, C)
+            F = float(1 << self.thread.out_frac_bits)
         pix = x.reshape(H * W, C)
         y = np.zeros((H * W, P), dtype=np.float64)
         ch_per_group = N_MATRICES * THREADS  # 18 channels in flight
@@ -239,14 +440,18 @@ class PEGrid:
                 c1 = min(c0 + ch_per_group, C)
                 for t in range(n_ptiles):
                     i0, i1 = t * 18, min((t + 1) * 18, H * W)
-                    if self.mode == "float":
+                    if not log_mode:
                         y[i0:i1, p] += pix[i0:i1, c0:c1] @ w[c0:c1, p]
+                    elif self.vectorized:
+                        # all 18×18 thread slots of the tile in one batch
+                        prods = self.thread.batch(
+                            wcf[None, c0:c1, p], xcf[i0:i1, c0:c1],
+                            wsf[None, c0:c1, p],
+                            a_nonzero=pix[i0:i1, c0:c1] != 0,
+                            w_nonzero=w[None, c0:c1, p] != 0)
+                        y[i0:i1, p] += prods.sum(axis=1) / F * xscale * wscale
                     else:
-                        F = 1 << self.thread.out_frac_bits
                         acc = np.zeros(i1 - i0, dtype=np.float64)
-                        wcf = wc.reshape(C, P)
-                        wsf = ws.reshape(C, P)
-                        xcf = xc.reshape(H * W, C)
                         for c in range(c0, c1):
                             prods = np.array([
                                 self.thread(int(wcf[c, p]), int(xcf[i, c]),

@@ -1,0 +1,13 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+`pltpu.CompilerParams` was renamed from `pltpu.TPUCompilerParams` across
+JAX releases; resolve whichever this install provides so the kernels run
+on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

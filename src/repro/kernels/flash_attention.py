@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -108,7 +110,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(qp, kp, vp)
     return out[:, :Tq]

@@ -1,0 +1,177 @@
+"""NHWC conv2d against packed 6-bit(+sign) log-quantized weights.
+
+This is the conv realisation of the NeuroMAX log-PE + 2D weight-broadcast
+dataflow on TPU, and the middle of the repo's three-tier conv stack:
+
+    kernels/log_conv2d.py  (this file, Pallas + blockwise + ref)
+        ↕  numerics cross-checked in tests/test_conv2d.py
+    core/pe_grid.py        (cycle-accurate 6×3×6 PE-grid hardware oracle)
+
+Three implementations share one contract (see `kernels/ops.conv2d` for the
+dispatch layer):
+
+  * ``log_conv2d_pallas`` — im2col patch tiling lowered onto the existing
+    `log_matmul_pallas` MXU kernel: weight codes stay int8 in HBM, are
+    decoded in VMEM next to the MXU (eq. 8's LUT+shift as `exp2` of a
+    half-integer), and psums never leave the accumulator — the §5 weight
+    broadcast mapped onto TPU tiling.  Grouped convs (MobileNet dwconv)
+    are lowered as a block-diagonal code matrix: out-of-group entries hold
+    the dedicated zero code, which decodes to an exact 0.0, so a single
+    MXU pass computes every group at once (bytes ×groups, a documented
+    trade for one kernel launch instead of `groups`).
+  * ``log_conv2d_blockwise`` — decode-then-`lax.conv` in jnp.  XLA fuses the
+    int8→float decode into the convolution's weight operand, so the weight
+    bytes that move stay int8 (same memory behaviour as the kernel); this
+    is what model lowering uses on every backend without Pallas.
+  * ``log_conv2d_ref`` — full-materialisation oracle: explicit im2col
+    patches against `ref.ref_log_matmul` at highest precision.  Independent
+    of `lax.conv`, so it cross-validates the patch extraction itself.
+
+All three take the same packed layout: ``packed [K, K, Cin//groups, Cout]``
+int8 codes with a per-output-channel (or scalar) fp scale, `stride`,
+`padding` ("SAME"/"VALID"/int/explicit pairs) and `groups`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.logquant import LogQuantConfig, log_dequantize
+from .log_matmul import log_matmul_pallas
+from .ref import ref_log_matmul
+
+DEFAULT_CFG = LogQuantConfig()
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+
+
+def _pad_pair(size: int, k: int, stride: int) -> tuple[int, int]:
+    """XLA-style SAME padding for one spatial dim."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2
+
+
+def normalize_padding(padding, K: int, stride: int, H: int, W: int):
+    """→ ((lo_h, hi_h), (lo_w, hi_w)), accepting SAME/VALID/int/pairs."""
+    if isinstance(padding, str):
+        p = padding.upper()
+        if p == "VALID":
+            return (0, 0), (0, 0)
+        if p == "SAME":
+            return _pad_pair(H, K, stride), _pad_pair(W, K, stride)
+        raise ValueError(f"unknown padding {padding!r}")
+    if isinstance(padding, int):
+        return (padding, padding), (padding, padding)
+    (ph, pw) = padding
+    if isinstance(ph, int):
+        return (ph, ph), (pw, pw)
+    return tuple(ph), tuple(pw)
+
+
+def _out_size(size: int, k: int, stride: int, pads: tuple[int, int]) -> int:
+    return (size + pads[0] + pads[1] - k) // stride + 1
+
+
+def _im2col(x, K: int, stride: int, pads):
+    """x: [B, H, W, C] → patches [B, Ho, Wo, K*K*C], tap-major (kh, kw, c).
+
+    The tap ordering matches ``w.reshape(K*K*Cin, Cout)`` of an HWIO kernel,
+    so a plain matmul against the reshaped weight is the convolution.
+    """
+    B, H, W, C = x.shape
+    (ph0, ph1), (pw0, pw1) = pads
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    Ho = _out_size(H, K, stride, (ph0, ph1))
+    Wo = _out_size(W, K, stride, (pw0, pw1))
+    taps = []
+    for kh in range(K):
+        for kw in range(K):
+            taps.append(jax.lax.slice(
+                xp, (0, kh, kw, 0),
+                (B, kh + (Ho - 1) * stride + 1, kw + (Wo - 1) * stride + 1, C),
+                (1, stride, stride, 1)))
+    patches = jnp.stack(taps, axis=3)            # [B, Ho, Wo, K*K, C]
+    return patches.reshape(B, Ho, Wo, K * K * C), Ho, Wo
+
+
+def _block_diag_codes(packed, groups: int):
+    """packed [K, K, cin_g, Cout] → [K*K*(groups·cin_g), Cout] block-diagonal
+    int8 codes: row (tap, g, i) holds the code for output channels of group
+    g only; everywhere else the zero code (int8 0), which decodes to 0.0."""
+    K1, K2, cin_g, Cout = packed.shape
+    cout_g = Cout // groups
+    taps = K1 * K2
+    w = packed.reshape(taps, cin_g, Cout)
+    if groups == 1:
+        return w.reshape(taps * cin_g, Cout)
+    group_of_out = jnp.arange(Cout) // cout_g                 # [Cout]
+    in_group = group_of_out[None, :] == jnp.arange(groups)[:, None]
+    # [taps, g, i, o] — keep codes only where o belongs to group g
+    wbd = w[:, None, :, :] * in_group[None, :, None, :].astype(packed.dtype)
+    return wbd.reshape(taps * groups * cin_g, Cout)
+
+
+def _check_shapes(x, packed, groups):
+    B, H, W, C = x.shape
+    K1, K2, cin_g, Cout = packed.shape
+    assert K1 == K2, f"square kernels only, got {K1}x{K2}"
+    assert C == cin_g * groups, (x.shape, packed.shape, groups)
+    assert Cout % groups == 0, (Cout, groups)
+    return B, H, W, C, K1, Cout
+
+
+# ---------------------------------------------------------------------------
+# the three implementations
+# ---------------------------------------------------------------------------
+
+
+def log_conv2d_pallas(x, packed, scale, cfg: LogQuantConfig = DEFAULT_CFG,
+                      *, stride: int = 1, padding="SAME", groups: int = 1,
+                      interpret: bool = False, out_dtype=None):
+    """Packed-weight conv on the `log_matmul_pallas` MXU path via im2col."""
+    B, H, W, C, K, Cout = _check_shapes(x, packed, groups)
+    pads = normalize_padding(padding, K, stride, H, W)
+    patches, Ho, Wo = _im2col(x, K, stride, pads)
+    codes = _block_diag_codes(packed, groups)
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1),
+                             (1, Cout))
+    out = log_matmul_pallas(patches.reshape(B * Ho * Wo, -1), codes, scale,
+                            cfg, interpret=interpret,
+                            out_dtype=out_dtype or x.dtype)
+    return out.reshape(B, Ho, Wo, Cout)
+
+
+def log_conv2d_blockwise(x, packed, scale, cfg: LogQuantConfig = DEFAULT_CFG,
+                         *, stride: int = 1, padding="SAME", groups: int = 1,
+                         out_dtype=None):
+    """Decode-then-conv fallback; XLA keeps the moved weight bytes int8."""
+    B, H, W, C, K, Cout = _check_shapes(x, packed, groups)
+    pads = normalize_padding(padding, K, stride, H, W)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    w = log_dequantize(packed, scale.reshape(1, 1, 1, -1), cfg,
+                       dtype=jnp.float32)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w, window_strides=(stride, stride),
+        padding=pads, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    return y.astype(out_dtype or x.dtype)
+
+
+def log_conv2d_ref(x, packed, scale, cfg: LogQuantConfig = DEFAULT_CFG,
+                   *, stride: int = 1, padding="SAME", groups: int = 1,
+                   out_dtype=None):
+    """Full-materialisation oracle: explicit patches × `ref_log_matmul`."""
+    B, H, W, C, K, Cout = _check_shapes(x, packed, groups)
+    pads = normalize_padding(padding, K, stride, H, W)
+    patches, Ho, Wo = _im2col(x.astype(jnp.float32), K, stride, pads)
+    codes = _block_diag_codes(packed, groups)
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1),
+                             (1, Cout))
+    out = ref_log_matmul(patches.reshape(B * Ho * Wo, -1), codes, scale, cfg,
+                         out_dtype=out_dtype or x.dtype)
+    return out.reshape(B, Ho, Wo, Cout)

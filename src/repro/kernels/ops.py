@@ -15,9 +15,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.logquant import LogQuantConfig, QuantizedTensor
+from repro.core.logquant import (LogQuantConfig, QuantizedTensor,
+                                 quantize_tensor)
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
+from .log_conv2d import (log_conv2d_blockwise, log_conv2d_pallas,
+                         log_conv2d_ref)
 from .log_matmul import log_matmul_pallas
 from .wkv6 import wkv6_chunked_jnp, wkv6_pallas
 
@@ -32,6 +35,9 @@ def _on_tpu() -> bool:
 def _resolve(impl: str) -> str:
     if impl == "auto":
         return "pallas" if _on_tpu() else "blockwise"
+    if impl not in ("pallas", "blockwise", "ref"):
+        raise ValueError(f"unknown impl {impl!r}; "
+                         f"expected pallas|blockwise|ref|auto")
     return impl
 
 
@@ -59,6 +65,42 @@ def log_matmul(x, qt: QuantizedTensor, *, impl: str = "auto",
         out = _ref.ref_log_matmul(x2, qt.packed, scale, qt.cfg,
                                   out_dtype=x.dtype)
     return out.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# conv2d — the unified log-domain conv dispatch layer
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
+           impl: str = "auto", interpret: bool | None = None,
+           out_dtype=None, qcfg: LogQuantConfig | None = None):
+    """x: [B, H, W, Cin] ⊛ dequant(qt [K, K, Cin//groups, Cout]) → NHWC out.
+
+    The single entry point of the three-tier conv stack (see
+    `kernels/log_conv2d.py`): ``impl`` picks the Pallas MXU kernel, the
+    blockwise jnp fallback, or the full-materialisation oracle; `auto`
+    means pallas on TPU and blockwise elsewhere.  `qt` is a
+    `QuantizedTensor` of packed log codes (per-output-channel scales
+    supported); a plain float array is packed on the fly as a convenience
+    (inference only — quantization is not differentiable).
+    Supports stride, SAME/VALID/explicit padding, and grouped/depthwise
+    convs (``groups=Cin``).
+    """
+    if not isinstance(qt, QuantizedTensor):
+        qt = quantize_tensor(jnp.asarray(qt), qcfg or LogQuantConfig())
+    assert qt.packed.ndim == 4, f"conv weights must be [K,K,Cin_g,Cout], " \
+        f"got {qt.packed.shape}"
+    impl = _resolve(impl)
+    kw = dict(stride=stride, padding=padding, groups=groups,
+              out_dtype=out_dtype)
+    if impl == "pallas":
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return log_conv2d_pallas(x, qt.packed, qt.scale, qt.cfg,
+                                 interpret=interp, **kw)
+    if impl == "ref":
+        return log_conv2d_ref(x, qt.packed, qt.scale, qt.cfg, **kw)
+    return log_conv2d_blockwise(x, qt.packed, qt.scale, qt.cfg, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import TPUCompilerParams
+
 
 def _chunk_math(r, k, v, logw, u, S0):
     """One chunk of the closed form above.  All inputs fp32.
@@ -118,7 +120,7 @@ def wkv6_pallas(r, k, v, logw, u, state=None, *, chunk=64, interpret=False):
         ],
         scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(rp, kp, vp, wp, up, sp)
 

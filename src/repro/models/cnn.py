@@ -3,11 +3,19 @@ MobileNet v1, ResNet-34, SqueezeNet) with optional base-√2 log fake-quant
 on conv weights *and* post-ReLU activations (paper §3: ReLU removes the
 need for an activation sign bit).
 
-These are real, trainable JAX models.  `quant="logq6"` inserts
-`fake_log_quant` (straight-through estimator) on every conv/dense weight and
-on every post-ReLU activation, matching the accelerator's numerics; the
-functional bit-exact path lives in `core/pe_grid.py`, and these two are
-cross-checked in tests.
+These are real, trainable JAX models.  Two orthogonal knobs:
+
+  * ``quant="logq6"`` inserts `fake_log_quant` (straight-through estimator)
+    on conv/dense weights and post-ReLU activations — the QAT path, fully
+    differentiable.
+  * ``conv_impl="pallas"|"blockwise"|"ref"|"auto"`` routes every conv
+    through the unified log-domain dispatcher `kernels/ops.conv2d`: weights
+    are packed int8 log codes (once at load via
+    `serving.quantize.quantize_cnn_params`, or on the fly) and the conv
+    executes against the codes — the true deployed numerics, top tier of
+    the three-tier conv stack (Pallas kernel ↔ blockwise fallback ↔
+    `core/pe_grid.py` hardware oracle).  Inference-only: packing is not
+    differentiable, so training keeps ``conv_impl=None`` (fake-quant).
 
 Layer lists intentionally mirror `core/accelerator.py` so the analytical
 dataflow model and the executable model describe the same networks.
@@ -21,7 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core.logquant import DEFAULT as LOGQ_DEFAULT
-from ..core.logquant import LogQuantConfig, fake_log_quant
+from ..core.logquant import (LogQuantConfig, QuantizedTensor, fake_log_quant,
+                             quantize_tensor)
+from ..kernels import ops as kops
 
 # ---------------------------------------------------------------------------
 # quant-aware primitives
@@ -33,13 +43,26 @@ def _maybe_fq(w, quant: str | None, cfg: LogQuantConfig):
 
 
 def conv2d(p, x, *, stride=1, pad="SAME", quant=None, qcfg=LOGQ_DEFAULT,
-           groups=1):
-    """x: [B, H, W, Cin]; p['w']: [K, K, Cin//groups, Cout]."""
-    w = _maybe_fq(p["w"], quant, qcfg)
-    y = jax.lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride), padding=pad,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=groups)
+           groups=1, conv_impl=None, interpret=None):
+    """x: [B, H, W, Cin]; p['w']: [K, K, Cin//groups, Cout] (float array or
+    packed `QuantizedTensor`).
+
+    With ``conv_impl`` set (or a pre-packed weight), the conv dispatches to
+    `kernels.ops.conv2d` on int8 log codes; otherwise it is the fake-quant
+    `lax.conv` QAT path.
+    """
+    w = p["w"]
+    if conv_impl is not None or isinstance(w, QuantizedTensor):
+        qt = w if isinstance(w, QuantizedTensor) else quantize_tensor(w, qcfg)
+        y = kops.conv2d(x, qt, stride=stride, padding=pad, groups=groups,
+                        impl=conv_impl or "auto", interpret=interpret,
+                        out_dtype=x.dtype)
+    else:
+        w = _maybe_fq(w, quant, qcfg)
+        y = jax.lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride), padding=pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
     if "b" in p:
         y = y + p["b"]
     return y
@@ -91,9 +114,12 @@ def vgg16_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
     return {"convs": params, "head": head}
 
 
-def vgg16_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
+def vgg16_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT, conv_impl=None,
+                interpret=None):
+    cv = functools.partial(conv2d, quant=quant, qcfg=qcfg,
+                           conv_impl=conv_impl, interpret=interpret)
     for p, (_, pool) in zip(params["convs"], _VGG_PLAN):
-        x = relu_q(conv2d(p, x, quant=quant, qcfg=qcfg), quant, qcfg)
+        x = relu_q(cv(p, x), quant, qcfg)
         if pool and min(x.shape[1], x.shape[2]) >= 2:
             x = maxpool(x)
     x = avgpool_global(x)
@@ -125,14 +151,15 @@ def mobilenet_v1_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
     return params
 
 
-def mobilenet_v1_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
-    x = relu_q(conv2d(params["stem"], x, stride=2, quant=quant, qcfg=qcfg),
-               quant, qcfg)
+def mobilenet_v1_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT,
+                       conv_impl=None, interpret=None):
+    cv = functools.partial(conv2d, quant=quant, qcfg=qcfg,
+                           conv_impl=conv_impl, interpret=interpret)
+    x = relu_q(cv(params["stem"], x, stride=2), quant, qcfg)
     for pair, (_, stride) in zip(params["pairs"], _MBN_PAIRS):
         c = x.shape[-1]
-        x = relu_q(conv2d(pair["dw"], x, stride=stride, groups=c,
-                          quant=quant, qcfg=qcfg), quant, qcfg)
-        x = relu_q(conv2d(pair["pw"], x, quant=quant, qcfg=qcfg), quant, qcfg)
+        x = relu_q(cv(pair["dw"], x, stride=stride, groups=c), quant, qcfg)
+        x = relu_q(cv(pair["pw"], x), quant, qcfg)
     x = avgpool_global(x)
     return x @ params["head"]["w"] + params["head"]["b"]
 
@@ -167,18 +194,18 @@ def resnet34_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
     return params
 
 
-def resnet34_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
-    x = relu_q(conv2d(params["stem"], x, stride=2, quant=quant, qcfg=qcfg),
-               quant, qcfg)
+def resnet34_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT,
+                   conv_impl=None, interpret=None):
+    cv = functools.partial(conv2d, quant=quant, qcfg=qcfg,
+                           conv_impl=conv_impl, interpret=interpret)
+    x = relu_q(cv(params["stem"], x, stride=2), quant, qcfg)
     if min(x.shape[1], x.shape[2]) >= 2:
         x = maxpool(x)
     for stage in params["stages"]:
         for blk, st in stage:
-            y = relu_q(conv2d(blk["c1"], x, stride=st, quant=quant,
-                              qcfg=qcfg), quant, qcfg)
-            y = conv2d(blk["c2"], y, quant=quant, qcfg=qcfg)
-            sc = conv2d(blk["proj"], x, stride=st, quant=quant, qcfg=qcfg) \
-                if "proj" in blk else x
+            y = relu_q(cv(blk["c1"], x, stride=st), quant, qcfg)
+            y = cv(blk["c2"], y)
+            sc = cv(blk["proj"], x, stride=st) if "proj" in blk else x
             x = relu_q(y + sc, quant, qcfg)
     x = avgpool_global(x)
     return x @ params["head"]["w"] + params["head"]["b"]
@@ -205,20 +232,21 @@ def squeezenet_init(key, *, n_classes=1000, cin=3, width_mult=1.0):
     return params
 
 
-def squeezenet_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT):
-    x = relu_q(conv2d(params["stem"], x, stride=2, quant=quant, qcfg=qcfg),
-               quant, qcfg)
+def squeezenet_apply(params, x, *, quant=None, qcfg=LOGQ_DEFAULT,
+                     conv_impl=None, interpret=None):
+    cv = functools.partial(conv2d, quant=quant, qcfg=qcfg,
+                           conv_impl=conv_impl, interpret=interpret)
+    x = relu_q(cv(params["stem"], x, stride=2), quant, qcfg)
     if min(x.shape[1], x.shape[2]) >= 2:
         x = maxpool(x, 3, 2)
     for i, fire in enumerate(params["fires"]):
         if i in (3, 7) and min(x.shape[1], x.shape[2]) >= 2:
             x = maxpool(x, 3, 2)
-        s = relu_q(conv2d(fire["squeeze"], x, quant=quant, qcfg=qcfg),
-                   quant, qcfg)
-        e1 = relu_q(conv2d(fire["e1"], s, quant=quant, qcfg=qcfg), quant, qcfg)
-        e3 = relu_q(conv2d(fire["e3"], s, quant=quant, qcfg=qcfg), quant, qcfg)
+        s = relu_q(cv(fire["squeeze"], x), quant, qcfg)
+        e1 = relu_q(cv(fire["e1"], s), quant, qcfg)
+        e3 = relu_q(cv(fire["e3"], s), quant, qcfg)
         x = jnp.concatenate([e1, e3], axis=-1)
-    x = relu_q(conv2d(params["final"], x, quant=quant, qcfg=qcfg), quant, qcfg)
+    x = relu_q(cv(params["final"], x), quant, qcfg)
     return avgpool_global(x)
 
 
@@ -235,10 +263,11 @@ CNNS = {
 
 
 def make_cnn(name: str, key, *, n_classes=1000, cin=3, width_mult=1.0,
-             quant=None, qcfg=LOGQ_DEFAULT):
+             quant=None, qcfg=LOGQ_DEFAULT, conv_impl=None, interpret=None):
     init, apply = CNNS[name]
     params = init(key, n_classes=n_classes, cin=cin, width_mult=width_mult)
-    return params, functools.partial(apply, quant=quant, qcfg=qcfg)
+    return params, functools.partial(apply, quant=quant, qcfg=qcfg,
+                                     conv_impl=conv_impl, interpret=interpret)
 
 
 def cnn_loss(apply_fn, params, batch):

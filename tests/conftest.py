@@ -1,0 +1,94 @@
+"""Suite-wide config: a minimal `hypothesis` fallback.
+
+`hypothesis` is an optional `[test]` extra (see pyproject.toml).  When it is
+absent the property tests would crash the whole collection with
+ModuleNotFoundError; instead we install a tiny stand-in that runs each
+property against deterministic pseudo-random examples.  It covers exactly the
+API surface this suite uses (`given`, `settings`, and the `integers`,
+`floats`, `lists`, `sampled_from`, `booleans` strategies) — no shrinking, no
+database, just honest example generation so the properties still execute.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+def _install_hypothesis_fallback() -> None:
+    class Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+               allow_infinity=False, width=64):
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def booleans():
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return Strategy(lambda rng: rng.choice(elements))
+
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return Strategy(sample)
+
+    def given(*strategies, **kw_strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 25)
+                # deterministic per-test seed so failures reproduce
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    vals = [s.example(rng) for s in strategies]
+                    kws = {k: s.example(rng)
+                           for k, s in kw_strategies.items()}
+                    fn(*args, *vals, **kwargs, **kws)
+            # pytest must not mistake the property's arguments for fixtures
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return decorate
+
+    def settings(max_examples=100, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.lists = lists
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__is_fallback__ = True
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:  # pragma: no cover - prefer the real thing when installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()

@@ -38,6 +38,38 @@ def test_cnn_logq6_close_to_fp(name):
     assert c > 0.9
 
 
+@pytest.mark.parametrize("name", sorted(CNNS))
+def test_cnn_conv_impl_blockwise_matches_fake_quant(name):
+    """conv_impl routes convs through kernels/ops.conv2d on packed codes;
+    same quantization grid as fake-quant ⇒ logits match within quant/conv
+    float tolerance."""
+    key = jax.random.PRNGKey(6)
+    params, apply_fq = make_cnn(name, key, n_classes=10, width_mult=0.25,
+                                quant="logq6")
+    _, apply_bw = make_cnn(name, key, n_classes=10, width_mult=0.25,
+                           quant="logq6", conv_impl="blockwise")
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 32, 32, 3))
+    lf = np.asarray(apply_fq(params, x))
+    lb = np.asarray(apply_bw(params, x))
+    np.testing.assert_allclose(lb, lf, atol=1e-4 * (np.abs(lf).max() + 1))
+
+
+def test_cnn_packed_at_load_matches_on_the_fly():
+    """serving.quantize_cnn_params packs once; forward equals per-call
+    packing and most parameter bytes become int8 codes."""
+    from repro.serving.quantize import (quantize_cnn_params,
+                                        quantized_fraction)
+    key = jax.random.PRNGKey(8)
+    params, apply_bw = make_cnn("mobilenet_v1", key, n_classes=10,
+                                width_mult=0.25, quant="logq6",
+                                conv_impl="blockwise")
+    qparams = quantize_cnn_params(params)
+    assert quantized_fraction(qparams) > 0.5
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 32, 32, 3))
+    np.testing.assert_array_equal(np.asarray(apply_bw(qparams, x)),
+                                  np.asarray(apply_bw(params, x)))
+
+
 def test_cnn_train_step_reduces_loss():
     key = jax.random.PRNGKey(4)
     params, apply_fn = make_cnn("squeezenet", key, n_classes=4,
