@@ -28,11 +28,15 @@ BENCHES = {
 }
 
 
+ALIASES = {"conv": "conv_kernels"}  # short names accepted by --only
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", nargs="*", choices=list(BENCHES))
+    ap.add_argument("--only", nargs="*",
+                    choices=list(BENCHES) + list(ALIASES))
     args = ap.parse_args(argv)
-    names = args.only or list(BENCHES)
+    names = [ALIASES.get(n, n) for n in (args.only or list(BENCHES))]
 
     summary = []
     ok_all = True

@@ -170,28 +170,38 @@ def linear_quantize(x: jnp.ndarray, int_bits: int, frac_bits: int):
 
 @jax.tree_util.register_pytree_node_class
 class QuantizedTensor:
-    """A log-quantized array: int8 packed codes + fp scale (+ static cfg)."""
+    """A log-quantized array: int8 packed codes + fp scale (+ static cfg).
 
-    def __init__(self, packed, scale, cfg: LogQuantConfig = DEFAULT, shape=None):
+    ``layout`` is a storage hint for consumers: ``None`` means ``packed``
+    has the natural layout of ``shape``; ``"conv_taps"`` means a conv
+    kernel pre-reshaped to tap-major ``[K*K, Cin_g, Cout]`` at load time
+    (what the fused Pallas conv kernel streams; `ops.conv2d` accepts both).
+    """
+
+    def __init__(self, packed, scale, cfg: LogQuantConfig = DEFAULT,
+                 shape=None, layout: str | None = None):
         self.packed = packed
         self.scale = scale
         self.cfg = cfg
         self.shape = shape if shape is not None else packed.shape
+        self.layout = layout
 
     def dequantize(self, dtype=jnp.bfloat16):
-        return log_dequantize(self.packed, self.scale, self.cfg, dtype=dtype)
+        out = log_dequantize(self.packed, self.scale, self.cfg, dtype=dtype)
+        return out.reshape(self.shape) if self.layout == "conv_taps" else out
 
     def tree_flatten(self):
-        return (self.packed, self.scale), (self.cfg, self.shape)
+        return (self.packed, self.scale), (self.cfg, self.shape, self.layout)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, scale = children
-        cfg, shape = aux
-        return cls(packed, scale, cfg, shape)
+        cfg, shape, layout = (aux if len(aux) == 3 else (*aux, None))
+        return cls(packed, scale, cfg, shape, layout)
 
     def __repr__(self):
-        return f"QuantizedTensor(shape={self.shape}, cfg={self.cfg})"
+        lay = f", layout={self.layout!r}" if self.layout else ""
+        return f"QuantizedTensor(shape={self.shape}, cfg={self.cfg}{lay})"
 
 
 def quantize_tensor(x, cfg: LogQuantConfig = DEFAULT) -> QuantizedTensor:

@@ -1,12 +1,17 @@
 """Pallas TPU kernels for the perf-critical hot spots + pure-jnp oracles.
 
 log_matmul       decode 6-bit log codes in VMEM → MXU dot (NeuroMAX PE path)
-log_conv2d       NHWC conv against packed log codes (im2col onto log_matmul)
+log_conv2d       NHWC conv against packed log codes: fused implicit-im2col
+                 kernel (VMEM patch extraction, grouped-conv grid) plus the
+                 explicit-im2col fallback onto log_matmul
+autotune         per-layer block-size search + on-disk tuning table for the
+                 fused conv kernel
 flash_attention  blockwise online-softmax attention (causal / window / GQA)
 wkv6             chunked RWKV6 WKV scan with data-dependent decay
 
 Every op is exposed through `ops` with an ``impl="pallas|blockwise|ref"``
-dispatch knob; see `ops.conv2d` for the unified log-domain conv entry point.
+dispatch knob (convs add ``"pallas_im2col"``); see `ops.conv2d` for the
+unified log-domain conv entry point.
 """
 from . import ops, ref
 from .ops import attention, conv2d, log_matmul, wkv6

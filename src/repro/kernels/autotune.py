@@ -1,0 +1,208 @@
+"""Block-size autotuner for the fused log-conv kernel.
+
+Per-layer dataflow/tiling choice dominates conv accelerator throughput
+(Shen et al.'s resource partitioning, MPNA's per-layer dataflows); this
+module brings that to `log_conv2d_fused_pallas`: enumerate candidate
+(block_cin, block_cout, rows_per_tile, batch_per_tile) configs that fit
+the VMEM budget, measure steady-state time per config on the live backend,
+and persist winners to an on-disk tuning table so later processes skip the
+search.
+
+Table format (JSON, atomic rename on write):
+
+    {"version": SCHEMA_VERSION,
+     "entries": {"<key>": {"config": {...}, "us": 12.3, "when": ...}}}
+
+Keys carry everything that changes the launch: backend, quant config,
+layer shape, stride, resolved padding, groups.  Invalidation is by
+`SCHEMA_VERSION` — bump it when the kernel's grid or config space changes
+and every entry is retuned on demand.  The table lives at
+``$REPRO_AUTOTUNE_PATH`` (or ``~/.cache/repro/conv_autotune.json``);
+`ops.conv2d(impl="pallas")` consults it on every call and falls back to
+`default_config` heuristics on a miss — tuning itself only runs when
+explicitly requested (``autotune=True``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core.logquant import LogQuantConfig
+from .log_conv2d import (fused_conv_geometry, log_conv2d_fused_pallas,
+                         normalize_padding)
+
+SCHEMA_VERSION = 1
+
+# VMEM high-water mark a candidate launch may plan for (double-buffered)
+VMEM_BUDGET_BYTES = 8 << 20
+
+_CACHE: dict | None = None  # lazy-loaded table, invalidated via reset_cache()
+
+
+def table_path() -> str:
+    p = os.environ.get("REPRO_AUTOTUNE_PATH")
+    if p:
+        return p
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "conv_autotune.json")
+
+
+def reset_cache() -> None:
+    global _CACHE
+    _CACHE = None
+
+
+def _load() -> dict:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = {"version": SCHEMA_VERSION, "entries": {}}
+        try:
+            with open(table_path()) as f:
+                t = json.load(f)
+            if t.get("version") == SCHEMA_VERSION:
+                _CACHE = t
+        except (OSError, ValueError):
+            pass
+    return _CACHE
+
+
+def _save(table: dict) -> None:
+    path = table_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def conv_key(B, H, W, C, K, Cout, *, stride=1, padding="SAME", groups=1,
+             cfg: LogQuantConfig = LogQuantConfig(),
+             backend: str | None = None) -> str:
+    """Everything that changes the fused launch, flattened to one string."""
+    (ph0, ph1), (pw0, pw1) = normalize_padding(padding, K, stride, H, W)
+    backend = backend or jax.default_backend()
+    return (f"{backend}|q{cfg.bits}.{cfg.frac_bits}"
+            f"|x{B}x{H}x{W}x{C}|k{K}o{Cout}|s{stride}|g{groups}"
+            f"|p{ph0}.{ph1}.{pw0}.{pw1}")
+
+
+def lookup(key: str) -> dict | None:
+    entry = _load()["entries"].get(key)
+    return dict(entry["config"]) if entry else None
+
+
+def record(key: str, config: dict, us: float) -> None:
+    table = _load()
+    table["entries"][key] = {"config": dict(config), "us": round(us, 2),
+                             "when": time.strftime("%Y-%m-%dT%H:%M:%S")}
+    _save(table)
+
+
+# ---------------------------------------------------------------------------
+# config space
+# ---------------------------------------------------------------------------
+
+
+def estimate_vmem_bytes(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
+                        groups=1, **config) -> int:
+    """Planned VMEM per grid step: activation slab + weight block + psum
+    accumulator + out block, ×2 for double buffering of the streamed refs."""
+    g = fused_conv_geometry(B, H, W, C, K, Cout, stride=stride,
+                            padding=padding, groups=groups, **config)
+    slab = g["bt"] * g["rows_in"] * g["Wp"] * g["bcin"] * 4
+    wblk = g["bcin"] * g["bcout"]
+    acc = g["bt"] * g["rt"] * g["Wo"] * g["bcout"] * 4
+    return 2 * (slab + wblk) + 2 * acc
+
+
+def default_config(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
+                   groups=1) -> dict:
+    """Heuristic used on a tuning-table miss: MXU-sized channel blocks, one
+    row tile (zero halo duplication), batch tile as wide as VMEM allows."""
+    return dict(block_cin=128, block_cout=128, rows_per_tile=None,
+                batch_per_tile=None)
+
+
+def candidate_configs(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
+                      groups=1, budget: int = VMEM_BUDGET_BYTES,
+                      max_candidates: int = 12) -> list[dict]:
+    """Candidate (block_cin, block_cout, rows_per_tile, batch_per_tile)
+    tuples that fit the VMEM budget, deduped after geometry clamping."""
+    g0 = fused_conv_geometry(B, H, W, C, K, Cout, stride=stride,
+                             padding=padding, groups=groups)
+    Ho, cin_g, cout_g = g0["Ho"], g0["cin_g"], g0["cout_g"]
+    rts = sorted({Ho, max(1, Ho // 2), min(Ho, 8), min(Ho, 4)})
+    bcis = sorted({min(cin_g, 32), min(cin_g, 128), min(cin_g, 256)})
+    bcos = sorted({min(cout_g, 32), min(cout_g, 128), min(cout_g, 256)})
+    bts = [1, None]  # single batch element vs widest-fit batch tile
+    seen, out = set(), []
+    for rt in rts:
+        for bci in bcis:
+            for bco in bcos:
+                for bt in bts:
+                    cfg = dict(block_cin=bci, block_cout=bco,
+                               rows_per_tile=rt, batch_per_tile=bt)
+                    g = fused_conv_geometry(B, H, W, C, K, Cout,
+                                            stride=stride, padding=padding,
+                                            groups=groups, **cfg)
+                    sig = (g["bcin"], g["bcout"], g["rt"], g["bt"])
+                    if sig in seen:
+                        continue
+                    if estimate_vmem_bytes(B, H, W, C, K, Cout,
+                                           stride=stride, padding=padding,
+                                           groups=groups, **cfg) > budget:
+                        continue
+                    seen.add(sig)
+                    out.append(cfg)
+    # prefer fewer, larger tiles first so the search front-loads likely wins
+    out.sort(key=lambda c: (-(c["rows_per_tile"] or Ho),
+                            -c["block_cout"], -c["block_cin"]))
+    return out[:max_candidates]
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+
+def _time_config(x, packed, scale, qcfg, kw, config, reps: int) -> float:
+    fn = lambda: log_conv2d_fused_pallas(x, packed, scale, qcfg, **kw,
+                                         **config)
+    jax.block_until_ready(fn())        # compile
+    jax.block_until_ready(fn())        # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def autotune_conv2d(x, packed, scale, qcfg: LogQuantConfig, *, stride=1,
+                    padding="SAME", groups=1, interpret=False, reps: int = 3,
+                    max_candidates: int = 12) -> dict:
+    """Measure candidates for this layer shape, persist and return the best.
+
+    Steady-state timing (compile excluded); the winner lands in the on-disk
+    table under `conv_key(...)` so every later process starts warm.
+    """
+    B, H, W, C = x.shape
+    K, Cout = packed.shape[0], packed.shape[-1]
+    shape_kw = dict(stride=stride, padding=padding, groups=groups)
+    key = conv_key(B, H, W, C, K, Cout, cfg=qcfg, **shape_kw,
+                   backend=("interpret" if interpret
+                            else jax.default_backend()))
+    kw = dict(interpret=interpret, **shape_kw)
+    best, best_us = None, float("inf")
+    for config in (candidate_configs(B, H, W, C, K, Cout, **shape_kw,
+                                     max_candidates=max_candidates)
+                   or [default_config(B, H, W, C, K, Cout, **shape_kw)]):
+        us = _time_config(x, packed, scale, qcfg, kw, config, reps)
+        if us < best_us:
+            best, best_us = config, us
+    record(key, best, best_us)
+    return dict(best)

@@ -7,18 +7,27 @@ dataflow on TPU, and the middle of the repo's three-tier conv stack:
         ↕  numerics cross-checked in tests/test_conv2d.py
     core/pe_grid.py        (cycle-accurate 6×3×6 PE-grid hardware oracle)
 
-Three implementations share one contract (see `kernels/ops.conv2d` for the
+Four implementations share one contract (see `kernels/ops.conv2d` for the
 dispatch layer):
 
-  * ``log_conv2d_pallas`` — im2col patch tiling lowered onto the existing
-    `log_matmul_pallas` MXU kernel: weight codes stay int8 in HBM, are
-    decoded in VMEM next to the MXU (eq. 8's LUT+shift as `exp2` of a
-    half-integer), and psums never leave the accumulator — the §5 weight
-    broadcast mapped onto TPU tiling.  Grouped convs (MobileNet dwconv)
-    are lowered as a block-diagonal code matrix: out-of-group entries hold
-    the dedicated zero code, which decodes to an exact 0.0, so a single
-    MXU pass computes every group at once (bytes ×groups, a documented
-    trade for one kernel launch instead of `groups`).
+  * ``log_conv2d_fused_pallas`` — direct NHWC conv: patch extraction
+    happens *in VMEM* (implicit im2col).  The grid walks (batch·row tiles,
+    groups, output-channel tiles, reduction over Cin blocks × K² taps);
+    an activation slab is loaded once per tile and re-sliced for every tap
+    (line-buffer-style reuse of the paper's §5 weight broadcast — no K²×
+    patch blow-up in HBM), weight codes stay packed int8 in HBM and decode
+    next to the MXU (eq. 8's LUT+shift as `exp2` of a half-integer), and
+    psums stay in the VMEM accumulator until flush.  Grouped/depthwise
+    convs are a grid dimension over groups — each step contracts only its
+    group's `cin_g` slice, so no block-diagonal `groups`× byte/FLOP waste.
+    Block sizes (`block_cin/block_cout/rows_per_tile/batch_per_tile`) are
+    tunable; `kernels/autotune.py` measures and persists winners.
+  * ``log_conv2d_pallas`` — the explicit-im2col fallback: patches are
+    materialised in HBM and tiled onto the `log_matmul_pallas` MXU kernel
+    (grouped convs as a block-diagonal code matrix whose out-of-group
+    entries hold the dedicated zero code).  K²× activation traffic, kept
+    as `impl="pallas_im2col"` for cross-checking and as the known-good
+    lowering.
   * ``log_conv2d_blockwise`` — decode-then-`lax.conv` in jnp.  XLA fuses the
     int8→float decode into the convolution's weight operand, so the weight
     bytes that move stay int8 (same memory behaviour as the kernel); this
@@ -27,18 +36,25 @@ dispatch layer):
     patches against `ref.ref_log_matmul` at highest precision.  Independent
     of `lax.conv`, so it cross-validates the patch extraction itself.
 
-All three take the same packed layout: ``packed [K, K, Cin//groups, Cout]``
+All four take the same packed layout: ``packed [K, K, Cin//groups, Cout]``
 int8 codes with a per-output-channel (or scalar) fp scale, `stride`,
 `padding` ("SAME"/"VALID"/int/explicit pairs) and `groups`.
+`conv_traffic_bytes` is the shared analytic HBM-traffic model the conv
+benchmark reports per impl.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.logquant import LogQuantConfig, log_dequantize
-from .log_matmul import log_matmul_pallas
+from ._compat import TPUCompilerParams
+from .log_matmul import _decode_block, log_matmul_pallas
 from .ref import ref_log_matmul
 
 DEFAULT_CFG = LogQuantConfig()
@@ -160,6 +176,235 @@ def log_conv2d_blockwise(x, packed, scale, cfg: LogQuantConfig = DEFAULT_CFG,
         padding=pads, dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=groups)
     return y.astype(out_dtype or x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused implicit-im2col kernel
+# ---------------------------------------------------------------------------
+
+
+def _ceil_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+def _fit_dim(x, axis: int, size: int):
+    """Pad with zeros or crop so ``x.shape[axis] == size`` (trailing edge)."""
+    cur = x.shape[axis]
+    if cur < size:
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, size - cur)
+        return jnp.pad(x, pads)
+    if cur > size:
+        return jax.lax.slice_in_dim(x, 0, size, axis=axis)
+    return x
+
+
+def fused_conv_geometry(B: int, H: int, W: int, C: int, K: int, Cout: int,
+                        *, stride: int = 1, padding="SAME", groups: int = 1,
+                        block_cin: int = 128, block_cout: int = 128,
+                        rows_per_tile: int | None = None,
+                        batch_per_tile: int | None = None) -> dict:
+    """Resolve the fused kernel's tiling for one layer shape.
+
+    Shared by the kernel itself, the autotuner's VMEM filter, and the
+    analytic traffic model, so all three describe the same launch.
+    """
+    pads = normalize_padding(padding, K, stride, H, W)
+    Ho = _out_size(H, K, stride, pads[0])
+    Wo = _out_size(W, K, stride, pads[1])
+    cin_g, cout_g = C // groups, Cout // groups
+    rt = Ho if rows_per_tile is None else max(1, min(int(rows_per_tile), Ho))
+    n_rt = -(-Ho // rt)
+    bcin = max(1, min(block_cin, cin_g))
+    bcout = max(1, min(block_cout, cout_g))
+    cin_gp, cout_gp = _ceil_to(cin_g, bcin), _ceil_to(cout_g, bcout)
+    rows_in = rt * stride + K - 1          # row tile + halo
+    Wp = Wo * stride + K - 1
+    Hp = n_rt * rt * stride + K - 1        # rows so every tile's halo exists
+    BT = B * n_rt
+    if batch_per_tile is None:
+        # weight-stationary across batch (the paper's multi-threaded weight
+        # broadcast): widen the batch tile while the slab fits ~4 MB VMEM
+        per = max(rows_in * Wp * bcin * 4, 1)
+        bt = max(1, min(BT, (4 << 20) // per))
+    else:
+        bt = max(1, min(int(batch_per_tile), BT))
+    while BT % bt:
+        bt -= 1
+    return dict(pads=pads, Ho=Ho, Wo=Wo, cin_g=cin_g, cout_g=cout_g,
+                rt=rt, n_rt=n_rt, bcin=bcin, bcout=bcout, cin_gp=cin_gp,
+                cout_gp=cout_gp, rows_in=rows_in, Wp=Wp, Hp=Hp, BT=BT, bt=bt,
+                ncb=cin_gp // bcin, njb=cout_gp // bcout, taps=K * K)
+
+
+def _fused_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *,
+                  cfg: LogQuantConfig, K: int, stride: int, bt: int, rt: int,
+                  Wo: int, acc_dtype):
+    c, t = pl.program_id(3), pl.program_id(4)
+
+    @pl.when((c == 0) & (t == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # implicit im2col: slice tap (kh, kw) out of the VMEM-resident activation
+    # slab — the slab itself was fetched once for this (tile, cin-block) and
+    # is re-sliced for all K² taps (line-buffer reuse, no HBM patch blow-up).
+    kh, kw = t // K, t % K
+    SH, SW = rt * stride, Wo * stride
+    xs = x_ref[:, pl.ds(kh, SH), pl.ds(kw, SW), :]       # [bt, SH, SW, bcin]
+    if stride > 1:
+        xs = xs.reshape(bt, rt, stride, Wo, stride, -1)[:, :, 0, :, 0, :]
+    patch = xs.reshape(bt * rt * Wo, -1).astype(acc_dtype)
+
+    # decode this tap's weight block next to the MXU (eq. 8 LUT+shift)
+    w = _decode_block(w_ref[0, 0], cfg, acc_dtype)       # [bcin, bcout]
+    acc_ref[...] += jnp.dot(patch, w, preferred_element_type=acc_dtype)
+
+    @pl.when((c == pl.num_programs(3) - 1) & (t == pl.num_programs(4) - 1))
+    def _flush():
+        out = acc_ref[...] * s_ref[0].astype(acc_dtype)
+        o_ref[...] = out.reshape(bt, rt, Wo, 1, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "stride", "padding", "groups", "interpret", "out_dtype",
+    "block_cin", "block_cout", "rows_per_tile", "batch_per_tile"))
+def log_conv2d_fused_pallas(x, packed, scale,
+                            cfg: LogQuantConfig = DEFAULT_CFG, *,
+                            stride: int = 1, padding="SAME", groups: int = 1,
+                            interpret: bool = False, out_dtype=None,
+                            block_cin: int = 128, block_cout: int = 128,
+                            rows_per_tile: int | None = None,
+                            batch_per_tile: int | None = None):
+    """Direct NHWC conv with VMEM patch extraction (implicit im2col).
+
+    Grid: (batch·row tiles, groups, cout blocks, cin blocks, K² taps) with
+    the reduction (cin, tap) innermost — the activation slab's block index
+    is constant across all taps, so it is fetched once per tile and reused
+    K² times; weight codes stream as packed int8 and decode in VMEM; psums
+    live in a VMEM scratch until the last reduction step.  Groups are a
+    grid dimension: each step contracts only its group's `cin_g` slice
+    (no block-diagonal expansion).  Block sizes are the autotuner's knobs;
+    grouped shapes with tiny `cin_g` (depthwise) use sub-tile blocks that
+    interpret mode handles exactly — a lane-packed layout for real-TPU
+    depthwise efficiency is a ROADMAP item.
+    """
+    B, H, W, C, K, Cout = _check_shapes(x, packed, groups)
+    g = fused_conv_geometry(
+        B, H, W, C, K, Cout, stride=stride, padding=padding, groups=groups,
+        block_cin=block_cin, block_cout=block_cout,
+        rows_per_tile=rows_per_tile, batch_per_tile=batch_per_tile)
+    G, taps = groups, g["taps"]
+    (ph0, _), (pw0, _) = g["pads"]
+    Ho, Wo, rt, n_rt, bt = g["Ho"], g["Wo"], g["rt"], g["n_rt"], g["bt"]
+    cin_g, cout_g, cin_gp, cout_gp = (g["cin_g"], g["cout_g"], g["cin_gp"],
+                                      g["cout_gp"])
+    bcin, bcout, ncb, njb = g["bcin"], g["bcout"], g["ncb"], g["njb"]
+    rows_in, Wp, Hp, BT = g["rows_in"], g["Wp"], g["Hp"], g["BT"]
+
+    # pad lead edges, then fit the trailing edge to the tiled extent (extra
+    # zero rows/cols are only read into discarded stride phases)
+    xp = jnp.pad(x, ((0, 0), (ph0, 0), (pw0, 0), (0, 0)))
+    xp = _fit_dim(_fit_dim(xp, 1, Hp), 2, Wp)
+    if cin_gp != cin_g:
+        x5 = xp.reshape(B, Hp, Wp, G, cin_g)
+        x5 = jnp.pad(x5, ((0, 0),) * 4 + ((0, cin_gp - cin_g),))
+        xp = x5.reshape(B, Hp, Wp, G * cin_gp)
+    if n_rt == 1:
+        xrt = xp                                  # rows_in == Hp
+    else:
+        # overlapping row tiles: duplicates only the (K-1)-row halo in HBM
+        tiles = [jax.lax.slice_in_dim(xp, i * rt * stride,
+                                      i * rt * stride + rows_in, axis=1)
+                 for i in range(n_rt)]
+        xrt = jnp.stack(tiles, axis=1).reshape(BT, rows_in, Wp, G * cin_gp)
+
+    # weights: [K, K, cin_g, Cout] → [G, taps, cin_gp, cout_gp], still int8
+    # (padding uses code 0, the dedicated zero code)
+    w = packed.reshape(taps, cin_g, G, cout_g)
+    w = jnp.pad(w, ((0, 0), (0, cin_gp - cin_g), (0, 0),
+                    (0, cout_gp - cout_g)))
+    w = w.transpose(2, 0, 1, 3)
+
+    s = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(-1), (Cout,))
+    s = jnp.pad(s.reshape(G, cout_g), ((0, 0), (0, cout_gp - cout_g)))
+
+    acc_dtype = jnp.float32
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, cfg=cfg, K=K, stride=stride, bt=bt,
+                          rt=rt, Wo=Wo, acc_dtype=acc_dtype),
+        grid=(BT // bt, G, njb, ncb, taps),
+        in_specs=[
+            pl.BlockSpec((bt, rows_in, Wp, bcin),
+                         lambda bi, gg, j, c, t: (bi, 0, 0, gg * ncb + c)),
+            pl.BlockSpec((1, 1, bcin, bcout),
+                         lambda bi, gg, j, c, t: (gg, t, c, j)),
+            pl.BlockSpec((1, bcout), lambda bi, gg, j, c, t: (gg, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, rt, Wo, 1, bcout),
+                               lambda bi, gg, j, c, t: (bi, 0, 0, gg, j)),
+        out_shape=jax.ShapeDtypeStruct((BT, rt, Wo, G, cout_gp),
+                                       out_dtype or x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt * rt * Wo, bcout), acc_dtype)],
+        interpret=interpret,
+        compiler_params=TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+    )(xrt, w, s)
+    out = out.reshape(B, n_rt * rt, Wo, G, cout_gp)[:, :Ho, :, :, :cout_g]
+    return out.reshape(B, Ho, Wo, Cout)
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM-traffic model (reported per impl by benchmarks/conv_kernels)
+# ---------------------------------------------------------------------------
+
+
+def conv_traffic_bytes(impl: str, B: int, H: int, W: int, C: int, K: int,
+                       Cout: int, *, stride: int = 1, padding="SAME",
+                       groups: int = 1, act_itemsize: int = 4,
+                       code_itemsize: int = 1, config: dict | None = None,
+                       matmul_block: int = 128) -> dict:
+    """Bytes moved HBM↔VMEM for one conv call, per implementation.
+
+    First-order model: counts every block fetch/spill the grid actually
+    performs (patch materialisation write+read, per-output-block activation
+    re-reads, per-tile weight re-reads) and ignores sub-block padding waste.
+    Returns ``{"act": ..., "w": ..., "out": ..., "act_w": ..., "total": ...}``.
+    """
+    pads = normalize_padding(padding, K, stride, H, W)
+    Ho, Wo = _out_size(H, K, stride, pads[0]), _out_size(W, K, stride, pads[1])
+    cin_g = C // groups
+    x_b = B * H * W * C * act_itemsize
+    out_b = B * Ho * Wo * Cout * act_itemsize
+    w_codes = K * K * cin_g * Cout * code_itemsize
+
+    if impl == "fp32":
+        act, w = x_b, K * K * cin_g * Cout * act_itemsize
+    elif impl == "blockwise":
+        act, w = x_b, w_codes
+    elif impl == "pallas_im2col":
+        # patches hit HBM: K² tap-slice reads of x, one write, then one read
+        # per output-channel block of the matmul; weights are block-diagonal
+        # (×groups) and re-read per M block.
+        patch_b = B * Ho * Wo * K * K * C * act_itemsize
+        n_j = -(-Cout // matmul_block)
+        n_i = -(-(B * Ho * Wo) // matmul_block)
+        act = patch_b * (2 + n_j)
+        w = K * K * groups * cin_g * Cout * code_itemsize * n_i
+    elif impl in ("pallas", "pallas_fused"):
+        g = fused_conv_geometry(B, H, W, C, K, Cout, stride=stride,
+                                padding=padding, groups=groups,
+                                **(config or {}))
+        n_bt = g["BT"] // g["bt"]
+        act = (n_bt * g["bt"] * g["rows_in"] * g["Wp"] * groups * g["cin_gp"]
+               * act_itemsize * g["njb"])
+        w = (groups * g["taps"] * g["cin_gp"] * g["cout_gp"] * code_itemsize
+             * n_bt)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return {"act": int(act), "w": int(w), "out": int(out_b),
+            "act_w": int(act + w), "total": int(act + w + out_b)}
 
 
 def log_conv2d_ref(x, packed, scale, cfg: LogQuantConfig = DEFAULT_CFG,

@@ -17,10 +17,11 @@ import jax.numpy as jnp
 
 from repro.core.logquant import (LogQuantConfig, QuantizedTensor,
                                  quantize_tensor)
+from . import autotune as _autotune
 from . import ref as _ref
 from .flash_attention import flash_attention_pallas
-from .log_conv2d import (log_conv2d_blockwise, log_conv2d_pallas,
-                         log_conv2d_ref)
+from .log_conv2d import (log_conv2d_blockwise, log_conv2d_fused_pallas,
+                         log_conv2d_pallas, log_conv2d_ref)
 from .log_matmul import log_matmul_pallas
 from .wkv6 import wkv6_chunked_jnp, wkv6_pallas
 
@@ -72,35 +73,79 @@ def log_matmul(x, qt: QuantizedTensor, *, impl: str = "auto",
 # ---------------------------------------------------------------------------
 
 
+_CONV_IMPLS = ("pallas", "pallas_im2col", "blockwise", "ref")
+
+
+def _resolve_conv(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "blockwise"
+    if impl not in _CONV_IMPLS:
+        raise ValueError(f"unknown conv impl {impl!r}; expected "
+                         f"pallas|pallas_im2col|blockwise|ref|auto")
+    return impl
+
+
+def _hashable_padding(padding):
+    if isinstance(padding, (list, tuple)):
+        return tuple(tuple(p) if isinstance(p, (list, tuple)) else p
+                     for p in padding)
+    return padding
+
+
 def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
            impl: str = "auto", interpret: bool | None = None,
-           out_dtype=None, qcfg: LogQuantConfig | None = None):
+           out_dtype=None, qcfg: LogQuantConfig | None = None,
+           config: dict | None = None, autotune: bool = False):
     """x: [B, H, W, Cin] ⊛ dequant(qt [K, K, Cin//groups, Cout]) → NHWC out.
 
     The single entry point of the three-tier conv stack (see
-    `kernels/log_conv2d.py`): ``impl`` picks the Pallas MXU kernel, the
-    blockwise jnp fallback, or the full-materialisation oracle; `auto`
-    means pallas on TPU and blockwise elsewhere.  `qt` is a
-    `QuantizedTensor` of packed log codes (per-output-channel scales
-    supported); a plain float array is packed on the fly as a convenience
-    (inference only — quantization is not differentiable).
-    Supports stride, SAME/VALID/explicit padding, and grouped/depthwise
-    convs (``groups=Cin``).
+    `kernels/log_conv2d.py`): ``impl="pallas"`` is the fused
+    implicit-im2col kernel (block sizes from the autotuner's on-disk table
+    when present, heuristics otherwise; ``config=`` overrides,
+    ``autotune=True`` measures candidates for this shape first and
+    persists the winner), ``"pallas_im2col"`` the explicit-im2col
+    fallback on `log_matmul_pallas`, ``"blockwise"`` the jnp fallback,
+    ``"ref"`` the full-materialisation oracle; `auto` means pallas on TPU
+    and blockwise elsewhere.  `qt` is a `QuantizedTensor` of packed log
+    codes (per-output-channel scales supported; the serving-time
+    ``layout="conv_taps"`` pre-reshape is accepted); a plain float array
+    is packed on the fly as a convenience (inference only — quantization
+    is not differentiable).  Supports stride, SAME/VALID/explicit padding,
+    and grouped/depthwise convs (``groups=Cin``).
     """
     if not isinstance(qt, QuantizedTensor):
         qt = quantize_tensor(jnp.asarray(qt), qcfg or LogQuantConfig())
-    assert qt.packed.ndim == 4, f"conv weights must be [K,K,Cin_g,Cout], " \
-        f"got {qt.packed.shape}"
-    impl = _resolve(impl)
+    packed = qt.packed
+    if getattr(qt, "layout", None) == "conv_taps":
+        packed = packed.reshape(qt.shape)  # [taps, cin_g, Cout] → 4-D HWIO
+    assert packed.ndim == 4, f"conv weights must be [K,K,Cin_g,Cout], " \
+        f"got {packed.shape}"
+    impl = _resolve_conv(impl)
+    padding = _hashable_padding(padding)
     kw = dict(stride=stride, padding=padding, groups=groups,
               out_dtype=out_dtype)
-    if impl == "pallas":
+    if impl in ("pallas", "pallas_im2col"):
         interp = (not _on_tpu()) if interpret is None else interpret
-        return log_conv2d_pallas(x, qt.packed, qt.scale, qt.cfg,
-                                 interpret=interp, **kw)
+        if impl == "pallas_im2col":
+            return log_conv2d_pallas(x, packed, qt.scale, qt.cfg,
+                                     interpret=interp, **kw)
+        B, H, W, C = x.shape
+        K, Cout = packed.shape[0], packed.shape[-1]
+        shape_kw = dict(stride=stride, padding=padding, groups=groups)
+        if config is None and autotune:
+            config = _autotune.autotune_conv2d(
+                x, packed, qt.scale, qt.cfg, interpret=interp, **shape_kw)
+        if config is None:
+            key = _autotune.conv_key(
+                B, H, W, C, K, Cout, cfg=qt.cfg, **shape_kw,
+                backend=("interpret" if interp else None))
+            config = _autotune.lookup(key) or _autotune.default_config(
+                B, H, W, C, K, Cout, **shape_kw)
+        return log_conv2d_fused_pallas(x, packed, qt.scale, qt.cfg,
+                                       interpret=interp, **kw, **config)
     if impl == "ref":
-        return log_conv2d_ref(x, qt.packed, qt.scale, qt.cfg, **kw)
-    return log_conv2d_blockwise(x, qt.packed, qt.scale, qt.cfg, **kw)
+        return log_conv2d_ref(x, packed, qt.scale, qt.cfg, **kw)
+    return log_conv2d_blockwise(x, packed, qt.scale, qt.cfg, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -8,12 +8,13 @@ These are real, trainable JAX models.  Two orthogonal knobs:
   * ``quant="logq6"`` inserts `fake_log_quant` (straight-through estimator)
     on conv/dense weights and post-ReLU activations — the QAT path, fully
     differentiable.
-  * ``conv_impl="pallas"|"blockwise"|"ref"|"auto"`` routes every conv
-    through the unified log-domain dispatcher `kernels/ops.conv2d`: weights
-    are packed int8 log codes (once at load via
-    `serving.quantize.quantize_cnn_params`, or on the fly) and the conv
+  * ``conv_impl="pallas"|"pallas_im2col"|"blockwise"|"ref"|"auto"`` routes
+    every conv through the unified log-domain dispatcher
+    `kernels/ops.conv2d`: weights are packed int8 log codes (once at load
+    via `serving.quantize.quantize_cnn_params`, or on the fly) and the conv
     executes against the codes — the true deployed numerics, top tier of
-    the three-tier conv stack (Pallas kernel ↔ blockwise fallback ↔
+    the three-tier conv stack (fused implicit-im2col Pallas kernel with
+    autotuned block sizes ↔ explicit-im2col fallback ↔ blockwise fallback ↔
     `core/pe_grid.py` hardware oracle).  Inference-only: packing is not
     differentiable, so training keeps ``conv_impl=None`` (fake-quant).
 
@@ -48,8 +49,9 @@ def conv2d(p, x, *, stride=1, pad="SAME", quant=None, qcfg=LOGQ_DEFAULT,
     packed `QuantizedTensor`).
 
     With ``conv_impl`` set (or a pre-packed weight), the conv dispatches to
-    `kernels.ops.conv2d` on int8 log codes; otherwise it is the fake-quant
-    `lax.conv` QAT path.
+    `kernels.ops.conv2d` on int8 log codes ("pallas" = the fused
+    implicit-im2col kernel, block sizes from the autotuning table);
+    otherwise it is the fake-quant `lax.conv` QAT path.
     """
     w = p["w"]
     if conv_impl is not None or isinstance(w, QuantizedTensor):

@@ -58,15 +58,29 @@ def quantize_params(params, qcfg: LogQuantConfig = LogQuantConfig()):
     return jax.tree_util.tree_map_with_path(leaf, params)
 
 
-def quantize_cnn_params(params, qcfg: LogQuantConfig = LogQuantConfig()):
+def quantize_cnn_params(params, qcfg: LogQuantConfig = LogQuantConfig(),
+                        conv_layout: str | None = None):
     """Pack every conv kernel (4-D ``w`` leaf: [K, K, Cin_g, Cout]) of a
     `models/cnn.py` parameter tree into a `QuantizedTensor` — one packing
     at load time, per-output-channel scales.  Biases and the 2-D dense head
-    stay fp (gathers/heads don't go through the log kernels)."""
+    stay fp (gathers/heads don't go through the log kernels).
+
+    ``conv_layout="conv_taps"`` additionally pre-reshapes each packed code
+    array to the tap-major ``[K*K, Cin_g, Cout]`` layout the fused Pallas
+    conv kernel streams from HBM, recorded as a layout hint on the
+    `QuantizedTensor` so `ops.conv2d` skips the per-call reshape."""
+    assert conv_layout in (None, "conv_taps"), conv_layout
 
     def leaf(path, x):
         if _leaf_name(path) == "w" and getattr(x, "ndim", 0) == 4:
-            return quantize_tensor(x, qcfg)
+            qt = quantize_tensor(x, qcfg)
+            if conv_layout == "conv_taps":
+                K1, K2, cin_g, cout = x.shape
+                return QuantizedTensor(
+                    qt.packed.reshape(K1 * K2, cin_g, cout),
+                    jax.numpy.reshape(qt.scale, (1, 1, -1)),
+                    qcfg, x.shape, layout="conv_taps")
+            return qt
         return x
 
     return jax.tree_util.tree_map_with_path(leaf, params)

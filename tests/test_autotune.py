@@ -1,0 +1,97 @@
+"""The fused-conv block-size autotuner: table persistence, keying,
+invalidation, candidate filtering, and numerics of tuned configs."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+from repro.core.logquant import LogQuantConfig, quantize_tensor
+
+SHAPE = dict(B=1, H=8, W=8, C=5, K=3, Cout=7)
+ARGS = (1, 8, 8, 5, 3, 7)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_table(tmp_path, monkeypatch):
+    """Every test gets its own on-disk table; the module cache is reset so
+    nothing leaks between tests (or into the user's real cache dir)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_PATH", str(tmp_path / "table.json"))
+    autotune.reset_cache()
+    yield
+    autotune.reset_cache()
+
+
+def test_key_carries_shape_stride_groups_backend():
+    k1 = autotune.conv_key(*ARGS, backend="cpu")
+    assert autotune.conv_key(*ARGS, backend="cpu") == k1  # deterministic
+    for other in (autotune.conv_key(1, 8, 8, 5, 3, 9, backend="cpu"),
+                  autotune.conv_key(*ARGS, stride=2, backend="cpu"),
+                  autotune.conv_key(*ARGS, padding="VALID", backend="cpu"),
+                  autotune.conv_key(*ARGS, backend="tpu"),
+                  autotune.conv_key(*ARGS, cfg=LogQuantConfig(bits=4),
+                                    backend="cpu")):
+        assert other != k1
+
+
+def test_record_lookup_roundtrip_persists():
+    key = autotune.conv_key(*ARGS, backend="cpu")
+    cfg = dict(block_cin=4, block_cout=8, rows_per_tile=4, batch_per_tile=1)
+    autotune.record(key, cfg, 12.5)
+    assert autotune.lookup(key) == cfg
+    autotune.reset_cache()          # force re-read from disk
+    assert autotune.lookup(key) == cfg
+    table = json.load(open(autotune.table_path()))
+    assert table["version"] == autotune.SCHEMA_VERSION
+    assert table["entries"][key]["us"] == 12.5
+
+
+def test_stale_schema_version_invalidates_table():
+    key = autotune.conv_key(*ARGS, backend="cpu")
+    autotune.record(key, dict(block_cin=4), 1.0)
+    autotune.reset_cache()
+    path = autotune.table_path()
+    table = json.load(open(path))
+    table["version"] = autotune.SCHEMA_VERSION - 1
+    json.dump(table, open(path, "w"))
+    assert autotune.lookup(key) is None  # stale entries are not served
+
+
+def test_corrupt_table_is_ignored():
+    with open(autotune.table_path(), "w") as f:
+        f.write("{not json")
+    assert autotune.lookup("anything") is None
+    autotune.record("k", dict(block_cin=4), 1.0)  # and is recoverable
+    autotune.reset_cache()
+    assert autotune.lookup("k") == dict(block_cin=4)
+
+
+def test_candidates_fit_vmem_budget_and_dedupe():
+    cands = autotune.candidate_configs(*ARGS)
+    assert cands, "no candidates for a tiny layer"
+    seen = set()
+    for c in cands:
+        assert autotune.estimate_vmem_bytes(
+            *ARGS, **c) <= autotune.VMEM_BUDGET_BYTES
+        sig = tuple(sorted(c.items(), key=str))
+        assert sig not in seen
+        seen.add(sig)
+
+
+def test_autotune_persists_winner_and_matches_ref():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 5, 7)).astype(np.float32))
+    qt = quantize_tensor(w)
+    y_tuned = ops.conv2d(x, qt, impl="pallas", interpret=True, autotune=True)
+    y_ref = ops.conv2d(x, qt, impl="ref")
+    np.testing.assert_allclose(np.asarray(y_tuned), np.asarray(y_ref),
+                               atol=1e-4 * float(jnp.max(jnp.abs(y_ref)) + 1))
+    key = autotune.conv_key(*ARGS, cfg=qt.cfg, backend="interpret")
+    winner = autotune.lookup(key)
+    assert winner is not None
+    # subsequent plain calls pick the persisted winner up transparently
+    y_again = ops.conv2d(x, qt, impl="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_again), np.asarray(y_tuned))

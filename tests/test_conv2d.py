@@ -36,6 +36,10 @@ SHAPES = [  # B, H, W, C, K, P, stride, padding, groups
     (1, 10, 10, 4, 1, 8, 1, "VALID", 1),  # 1x1 (pwconv)
     (1, 8, 8, 6, 3, 4, 2, "SAME", 2),     # grouped, stride 2
     (1, 8, 8, 3, 5, 4, 2, 2, 1),          # K=5, int padding (ResNet stem)
+    # normalize_padding edge cases, through every impl:
+    (1, 8, 8, 3, 3, 5, 1, ((1, 2), (0, 1)), 1),  # explicit asymmetric pairs
+    (1, 10, 10, 4, 3, 6, 2, "SAME", 1),   # SAME, even input, stride 2
+    (1, 9, 9, 4, 3, 5, 2, "VALID", 1),    # VALID where Ho/Wo round down
 ]
 
 
@@ -48,11 +52,34 @@ def test_conv2d_impls_agree(B, H, W, C, K, P, stride, padding, groups):
     kw = dict(stride=stride, padding=padding, groups=groups)
     y_ref = ops.conv2d(x, qt, impl="ref", **kw)
     y_bw = ops.conv2d(x, qt, impl="blockwise", **kw)
-    y_pl = ops.conv2d(x, qt, impl="pallas", interpret=True, **kw)
-    assert y_ref.shape == y_bw.shape == y_pl.shape
+    y_im = ops.conv2d(x, qt, impl="pallas_im2col", interpret=True, **kw)
+    y_fz = ops.conv2d(x, qt, impl="pallas", interpret=True, **kw)
+    assert y_ref.shape == y_bw.shape == y_im.shape == y_fz.shape
     tol = 1e-4 * float(jnp.max(jnp.abs(y_ref)) + 1)
-    np.testing.assert_allclose(np.asarray(y_bw), np.asarray(y_ref), atol=tol)
-    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref), atol=tol)
+    for y in (y_bw, y_im, y_fz):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=tol)
+    # acceptance: fused ≡ blockwise within 1e-3 max-abs
+    assert float(jnp.max(jnp.abs(y_fz - y_bw))) < 1e-3
+
+
+@pytest.mark.parametrize("config", [
+    dict(rows_per_tile=2),                      # row tiles + halo duplication
+    dict(rows_per_tile=3, batch_per_tile=1),    # non-dividing row tile
+    dict(rows_per_tile=1, batch_per_tile=3),    # batch-stationary weights
+    dict(block_cin=4, block_cout=4),            # multi-block reduction
+])
+def test_fused_tiling_configs_agree(config):
+    """Every (rows_per_tile, batch_per_tile, block) tiling is numerically
+    the same conv — the autotuner may pick any of them."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(3, 11, 9, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 6, 8)).astype(np.float32))
+    qt = quantize_tensor(w)
+    y_ref = ops.conv2d(x, qt, impl="ref", stride=2)
+    y = ops.conv2d(x, qt, impl="pallas", interpret=True, stride=2,
+                   config=dict(config))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4 * float(jnp.max(jnp.abs(y_ref)) + 1))
 
 
 def test_conv2d_accepts_unpacked_weights():
@@ -94,7 +121,8 @@ def test_kernel_matches_pe_grid_3x3(stride):
 
     qt = quantize_tensor(jnp.asarray(w), CFG)
     xd = jnp.asarray(_deq(x))[None]  # the codes the grid's threads see
-    for impl, kw in (("blockwise", {}), ("pallas", {"interpret": True})):
+    for impl, kw in (("blockwise", {}), ("pallas", {"interpret": True}),
+                    ("pallas_im2col", {"interpret": True})):
         y_k = ops.conv2d(xd, qt, stride=stride, padding="VALID", impl=impl,
                          **kw)
         np.testing.assert_allclose(np.asarray(y_k[0]), y_grid,
@@ -112,7 +140,8 @@ def test_kernel_matches_pe_grid_depthwise():
 
     qt = quantize_tensor(jnp.asarray(w)[:, :, None, :], CFG)  # [3,3,1,C]
     xd = jnp.asarray(_deq(x))[None]
-    for impl, kw in (("blockwise", {}), ("pallas", {"interpret": True})):
+    for impl, kw in (("blockwise", {}), ("pallas", {"interpret": True}),
+                    ("pallas_im2col", {"interpret": True})):
         y_k = ops.conv2d(xd, qt, padding="VALID", groups=C, impl=impl, **kw)
         np.testing.assert_allclose(np.asarray(y_k[0]), y_grid,
                                    atol=_grid_tol(y_grid))
@@ -128,7 +157,8 @@ def test_kernel_matches_pe_grid_1x1():
 
     qt = quantize_tensor(jnp.asarray(w)[None, None], CFG)  # [1,1,20,6]
     xd = jnp.asarray(_deq(x))[None]
-    for impl, kw in (("blockwise", {}), ("pallas", {"interpret": True})):
+    for impl, kw in (("blockwise", {}), ("pallas", {"interpret": True}),
+                    ("pallas_im2col", {"interpret": True})):
         y_k = ops.conv2d(xd, qt, padding="VALID", impl=impl, **kw)
         np.testing.assert_allclose(np.asarray(y_k[0]), y_grid,
                                    atol=_grid_tol(y_grid))
