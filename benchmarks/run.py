@@ -11,14 +11,15 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import (ablation_grad_compress, conv_kernels, fig1_quant,
-               fig17_pe_cost, fig19_utilization, fig20_throughput,
+from . import (ablation_grad_compress, attention_kernels, conv_kernels,
+               fig1_quant, fig17_pe_cost, fig19_utilization, fig20_throughput,
                table2_comparison, table3_latency)
 from .common import timed
 
 BENCHES = {
     "fig1_quant": (fig1_quant, "snr_gain_db"),
     "conv_kernels": (conv_kernels, "mean_blockwise_overhead_x"),
+    "attention_kernels": (attention_kernels, "min_gqa4_traffic_win_x"),
     "fig17_pe_cost": (fig17_pe_cost, "tput_per_pe"),
     "fig19_utilization": (fig19_utilization, None),
     "fig20_throughput": (fig20_throughput, "adjusted_pes"),
@@ -28,7 +29,8 @@ BENCHES = {
 }
 
 
-ALIASES = {"conv": "conv_kernels"}  # short names accepted by --only
+ALIASES = {"conv": "conv_kernels",  # short names accepted by --only
+           "attention": "attention_kernels"}
 
 
 def main(argv=None) -> int:

@@ -4,14 +4,18 @@ log_matmul       decode 6-bit log codes in VMEM → MXU dot (NeuroMAX PE path)
 log_conv2d       NHWC conv against packed log codes: fused implicit-im2col
                  kernel (VMEM patch extraction, grouped-conv grid) plus the
                  explicit-im2col fallback onto log_matmul
-autotune         per-layer block-size search + on-disk tuning table for the
-                 fused conv kernel
-flash_attention  blockwise online-softmax attention (causal / window / GQA)
+autotune         per-layer block-size search + op-keyed on-disk tuning
+                 table (conv2d and attention namespaces)
+flash_attention  blockwise online-softmax attention, GQA-native (kv-head
+                 grid dimension, causal / window, traced decode offsets)
 wkv6             chunked RWKV6 WKV scan with data-dependent decay
 
-Every op is exposed through `ops` with an ``impl="pallas|blockwise|ref"``
-dispatch knob (convs add ``"pallas_im2col"``); see `ops.conv2d` for the
-unified log-domain conv entry point.
+Every op is exposed through `ops` with the unified dispatch surface —
+``impl="pallas|blockwise|ref|auto"`` (convs add ``"pallas_im2col"``),
+``config=`` per-op spec dataclasses (`AttentionConfig`, `ConvConfig`,
+`WkvConfig`), ``interpret=`` and (for the tiled kernels)
+``autotune=``; `ops.resolve_impl` documents the precedence order.
 """
 from . import ops, ref
-from .ops import attention, conv2d, log_matmul, wkv6
+from .ops import (AttentionConfig, ConvConfig, WkvConfig, attention, conv2d,
+                  log_matmul, resolve_impl, wkv6)

@@ -1,26 +1,33 @@
-"""Block-size autotuner for the fused log-conv kernel.
+"""Op-keyed block-size autotuner for the Pallas kernels.
 
-Per-layer dataflow/tiling choice dominates conv accelerator throughput
-(Shen et al.'s resource partitioning, MPNA's per-layer dataflows); this
-module brings that to `log_conv2d_fused_pallas`: enumerate candidate
-(block_cin, block_cout, rows_per_tile, batch_per_tile) configs that fit
-the VMEM budget, measure steady-state time per config on the live backend,
-and persist winners to an on-disk tuning table so later processes skip the
-search.
+Per-layer dataflow/tiling choice dominates accelerator throughput (Shen
+et al.'s resource partitioning, MPNA's per-layer dataflows); this module
+brings that to every tiled kernel behind `kernels/ops.py`: enumerate
+candidate block configs that fit the VMEM budget, measure steady-state
+time per config on the live backend, and persist winners to an on-disk
+tuning table so later processes skip the search.
+
+One table serves every op.  Keys are namespaced per op —
+``conv2d|<shape-key>`` entries hold `log_conv2d_fused_pallas`
+(block_cin, block_cout, rows_per_tile, batch_per_tile) configs;
+``attention|<shape-key>`` entries hold `flash_attention_pallas`
+(block_q, block_k) configs.
 
 Table format (JSON, atomic rename on write):
 
     {"version": SCHEMA_VERSION,
-     "entries": {"<key>": {"config": {...}, "us": 12.3, "when": ...}}}
+     "entries": {"<op>|<key>": {"config": {...}, "us": 12.3, "when": ...}}}
 
-Keys carry everything that changes the launch: backend, quant config,
-layer shape, stride, resolved padding, groups.  Invalidation is by
-`SCHEMA_VERSION` — bump it when the kernel's grid or config space changes
-and every entry is retuned on demand.  The table lives at
-``$REPRO_AUTOTUNE_PATH`` (or ``~/.cache/repro/conv_autotune.json``);
-`ops.conv2d(impl="pallas")` consults it on every call and falls back to
-`default_config` heuristics on a miss — tuning itself only runs when
-explicitly requested (``autotune=True``).
+Keys carry everything that changes the launch: op, backend, quant config,
+layer shape, stride/padding/groups (conv) or seq lengths/head
+counts/masking (attention).  Invalidation is by `SCHEMA_VERSION` — bump
+it when any kernel's grid or config space changes and every entry is
+retuned on demand.  The table lives at ``$REPRO_AUTOTUNE_PATH`` (or
+``~/.cache/repro/kernel_autotune.json``); `ops.conv2d(impl="pallas")`
+and `ops.attention(impl="pallas")` consult it on every call and fall
+back to `default_config` / `default_attention_config` heuristics on a
+miss — tuning itself only runs when explicitly requested
+(``autotune=True``).
 """
 
 from __future__ import annotations
@@ -32,10 +39,12 @@ import time
 import jax
 
 from repro.core.logquant import LogQuantConfig
+from .flash_attention import flash_attention_pallas
 from .log_conv2d import (fused_conv_geometry, log_conv2d_fused_pallas,
                          normalize_padding)
 
-SCHEMA_VERSION = 1
+# v2: op-namespaced keys (conv2d|… / attention|…), one table for all ops
+SCHEMA_VERSION = 2
 
 # VMEM high-water mark a candidate launch may plan for (double-buffered)
 VMEM_BUDGET_BYTES = 8 << 20
@@ -48,7 +57,7 @@ def table_path() -> str:
     if p:
         return p
     return os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                        "conv_autotune.json")
+                        "kernel_autotune.json")
 
 
 def reset_cache() -> None:
@@ -83,12 +92,20 @@ def _save(table: dict) -> None:
 def conv_key(B, H, W, C, K, Cout, *, stride=1, padding="SAME", groups=1,
              cfg: LogQuantConfig = LogQuantConfig(),
              backend: str | None = None) -> str:
-    """Everything that changes the fused launch, flattened to one string."""
+    """Everything that changes the fused conv launch, as one namespaced key."""
     (ph0, ph1), (pw0, pw1) = normalize_padding(padding, K, stride, H, W)
     backend = backend or jax.default_backend()
-    return (f"{backend}|q{cfg.bits}.{cfg.frac_bits}"
+    return (f"conv2d|{backend}|q{cfg.bits}.{cfg.frac_bits}"
             f"|x{B}x{H}x{W}x{C}|k{K}o{Cout}|s{stride}|g{groups}"
             f"|p{ph0}.{ph1}.{pw0}.{pw1}")
+
+
+def attention_key(B, Tq, Tk, H, Hkv, D, *, causal=True, window=None,
+                  backend: str | None = None) -> str:
+    """Everything that changes the attention launch, as one namespaced key."""
+    backend = backend or jax.default_backend()
+    return (f"attention|{backend}|b{B}|q{Tq}|k{Tk}|h{H}.{Hkv}|d{D}"
+            f"|c{int(bool(causal))}|w{window if window is not None else '-'}")
 
 
 def lookup(key: str) -> dict | None:
@@ -166,6 +183,58 @@ def candidate_configs(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
 
 
 # ---------------------------------------------------------------------------
+# attention config space
+# ---------------------------------------------------------------------------
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def estimate_attention_vmem_bytes(B, Tq, Tk, H, Hkv, D, *, block_q=128,
+                                  block_k=128, itemsize=4) -> int:
+    """Planned VMEM per grid step of `flash_attention_pallas`: q/k/v/out
+    tiles (×2 double-buffered streams), the (m, l, acc) scratch carry, and
+    the live [bq, bk] score/prob intermediates."""
+    tiles = (block_q * D + 2 * block_k * D + block_q * D) * itemsize
+    scratch = (block_q * D + 2 * block_q) * 4
+    s_live = 2 * block_q * block_k * 4
+    return 2 * tiles + scratch + s_live
+
+
+def default_attention_config(B, Tq, Tk, H, Hkv, D) -> dict:
+    """Heuristic on a tuning-table miss: MXU-friendly tiles clamped to the
+    folded q-row count (rep · Tq — decode packs a whole kv group into one
+    block) and the kv length."""
+    rows = (H // Hkv) * Tq
+    return dict(block_q=min(128, _round_up(rows, 8)),
+                block_k=min(128, _round_up(Tk, 8)))
+
+
+def attention_candidate_configs(B, Tq, Tk, H, Hkv, D, *,
+                                budget: int = VMEM_BUDGET_BYTES,
+                                max_candidates: int = 12) -> list[dict]:
+    """Candidate (block_q, block_k) pairs that fit the VMEM budget,
+    deduped after clamping to the folded-row/kv extents."""
+    rows = (H // Hkv) * Tq
+    bqs = sorted({min(_round_up(rows, 8), bq) for bq in (32, 64, 128, 256)})
+    bks = sorted({min(_round_up(Tk, 8), bk) for bk in (128, 256, 512, 1024)})
+    seen, out = set(), []
+    for bq in bqs:
+        for bk in bks:
+            if (bq, bk) in seen:
+                continue
+            if estimate_attention_vmem_bytes(B, Tq, Tk, H, Hkv, D,
+                                             block_q=bq, block_k=bk) > budget:
+                continue
+            seen.add((bq, bk))
+            out.append(dict(block_q=bq, block_k=bk))
+    # larger tiles first: fewer grid steps usually wins on hardware
+    out.sort(key=lambda c: (-c["block_q"] * c["block_k"], -c["block_k"]))
+    return out[:max_candidates]
+
+
+# ---------------------------------------------------------------------------
 # measurement
 # ---------------------------------------------------------------------------
 
@@ -202,6 +271,42 @@ def autotune_conv2d(x, packed, scale, qcfg: LogQuantConfig, *, stride=1,
                                      max_candidates=max_candidates)
                    or [default_config(B, H, W, C, K, Cout, **shape_kw)]):
         us = _time_config(x, packed, scale, qcfg, kw, config, reps)
+        if us < best_us:
+            best, best_us = config, us
+    record(key, best, best_us)
+    return dict(best)
+
+
+def autotune_attention(q, k, v, *, causal=True, window=None, scale=None,
+                       interpret=False, reps: int = 3,
+                       max_candidates: int = 12) -> dict:
+    """Measure (block_q, block_k) candidates for this attention shape,
+    persist and return the best.
+
+    Steady-state timing (compile excluded); the winner lands in the
+    on-disk table under `attention_key(...)` so every later process
+    starts warm.  Offsets don't enter the key — they are scalar-prefetch
+    operands, not launch geometry."""
+    B, Tq, H, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    key = attention_key(B, Tq, Tk, H, Hkv, D, causal=causal, window=window,
+                        backend=("interpret" if interpret
+                                 else jax.default_backend()))
+    shape = (B, Tq, Tk, H, Hkv, D)
+    best, best_us = None, float("inf")
+    for config in (attention_candidate_configs(*shape,
+                                               max_candidates=max_candidates)
+                   or [default_attention_config(*shape)]):
+        fn = lambda: flash_attention_pallas(q, k, v, causal=causal,
+                                            window=window, scale=scale,
+                                            interpret=interpret, **config)
+        jax.block_until_ready(fn())        # compile
+        jax.block_until_ready(fn())        # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / reps * 1e6
         if us < best_us:
             best, best_us = config, us
     record(key, best, best_us)

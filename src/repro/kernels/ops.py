@@ -1,16 +1,34 @@
 """Jit'd public wrappers around the Pallas kernels, with pure-jnp fallbacks.
 
-Dispatch policy (`impl=`):
+The unified kernel-call surface.  Every public op takes the same trio of
+dispatch knobs, resolved by `resolve_impl` with one precedence order:
+
+  impl=       "pallas" | "blockwise" | "ref" | "auto" (+ op-specific
+              aliases, e.g. conv2d's "pallas_im2col").  "auto" → pallas
+              on TPU, blockwise elsewhere.
+  config=     a per-op frozen config dataclass (`AttentionConfig`,
+              `ConvConfig`, `WkvConfig`) holding block sizes / math
+              knobs.  Fields left at None are filled from the autotune
+              table (`kernels/autotune.py`) when an entry exists for the
+              shape, else from per-op heuristics.
+  interpret=  None → interpret off-TPU (so Pallas kernels run anywhere);
+              an explicit bool always wins.
+
+Plus ``autotune=True`` on the tiled kernels (conv2d, attention) to
+measure candidates for the call's shape first and persist the winner.
+
+Implementations per op:
   "pallas"    — the Pallas kernel (TPU; `interpret=True` executes on CPU)
   "blockwise" — pure-jnp blockwise/chunked math (same memory behaviour under
                 XLA; this is what model lowering uses on every backend)
   "ref"       — full-materialisation oracle (small shapes / tests)
-  "auto"      — pallas on TPU, blockwise elsewhere
 """
 
 from __future__ import annotations
 
-import functools
+import dataclasses
+import warnings
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -33,13 +51,75 @@ def _on_tpu() -> bool:
         return False
 
 
-def _resolve(impl: str) -> str:
+_OP_IMPLS = {
+    "log_matmul": ("pallas", "blockwise", "ref"),
+    "conv2d": ("pallas", "pallas_im2col", "blockwise", "ref"),
+    "attention": ("pallas", "blockwise", "ref"),
+    "wkv6": ("pallas", "blockwise", "ref"),
+}
+
+
+def resolve_impl(op: str, impl: str = "auto",
+                 interpret: bool | None = None) -> tuple[str, bool]:
+    """Resolve (impl, interpret) for one op.  The single precedence order:
+
+    1. an explicit ``impl`` (validated against the op's implementations)
+       beats ``"auto"``, which picks "pallas" on TPU and "blockwise"
+       elsewhere;
+    2. an explicit ``interpret`` bool beats the default ``None``, which
+       means "interpret when not on TPU" (Pallas kernels stay runnable on
+       CPU CI).  The returned bool only matters for Pallas impls.
+    """
+    choices = _OP_IMPLS[op]
     if impl == "auto":
-        return "pallas" if _on_tpu() else "blockwise"
-    if impl not in ("pallas", "blockwise", "ref"):
-        raise ValueError(f"unknown impl {impl!r}; "
-                         f"expected pallas|blockwise|ref|auto")
-    return impl
+        impl = "pallas" if _on_tpu() else "blockwise"
+    if impl not in choices:
+        raise ValueError(f"unknown {op} impl {impl!r}; expected "
+                         f"{'|'.join(choices)}|auto")
+    if interpret is None:
+        interpret = not _on_tpu()
+    return impl, interpret
+
+
+# ---------------------------------------------------------------------------
+# per-op kernel configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    """Tiling/math spec for `attention`.  None block sizes are filled from
+    the autotune table (key: `autotune.attention_key`) or heuristics."""
+    block_q: int | None = None       # pallas q tile (folded rep·Tq rows)
+    block_k: int | None = None       # pallas kv tile / blockwise scan chunk
+    acc_dtype: Any = jnp.float32     # blockwise score/accum math dtype
+    gqa_broadcast: bool = False      # blockwise: einsum-broadcast GQA
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    """Tiling spec for `conv2d`'s fused kernel; None fields let
+    `log_conv2d_fused_pallas` clamp to the layer geometry."""
+    block_cin: int | None = None
+    block_cout: int | None = None
+    rows_per_tile: int | None = None
+    batch_per_tile: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class WkvConfig:
+    """Chunking spec for `wkv6` (chunk length bounds the exp dynamic
+    range — see `kernels/wkv6.py`)."""
+    chunk: int = 64
+
+
+def _conv_config_dict(config) -> dict | None:
+    if config is None:
+        return None
+    if isinstance(config, ConvConfig):
+        return {k: v for k, v in dataclasses.asdict(config).items()
+                if v is not None}
+    return dict(config)
 
 
 # ---------------------------------------------------------------------------
@@ -50,14 +130,13 @@ def _resolve(impl: str) -> str:
 def log_matmul(x, qt: QuantizedTensor, *, impl: str = "auto",
                interpret: bool | None = None):
     """x: [..., K] @ dequant(qt [K, N]) → [..., N]."""
-    impl = _resolve(impl)
+    impl, interp = resolve_impl("log_matmul", impl, interpret)
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     scale = jnp.broadcast_to(jnp.asarray(qt.scale, jnp.float32),
                              (1, qt.packed.shape[-1]))
     if impl == "pallas":
-        interp = (not _on_tpu()) if interpret is None else interpret
         out = log_matmul_pallas(x2, qt.packed, scale, qt.cfg,
                                 interpret=interp, out_dtype=x.dtype)
     else:
@@ -73,18 +152,6 @@ def log_matmul(x, qt: QuantizedTensor, *, impl: str = "auto",
 # ---------------------------------------------------------------------------
 
 
-_CONV_IMPLS = ("pallas", "pallas_im2col", "blockwise", "ref")
-
-
-def _resolve_conv(impl: str) -> str:
-    if impl == "auto":
-        return "pallas" if _on_tpu() else "blockwise"
-    if impl not in _CONV_IMPLS:
-        raise ValueError(f"unknown conv impl {impl!r}; expected "
-                         f"pallas|pallas_im2col|blockwise|ref|auto")
-    return impl
-
-
 def _hashable_padding(padding):
     if isinstance(padding, (list, tuple)):
         return tuple(tuple(p) if isinstance(p, (list, tuple)) else p
@@ -95,23 +162,24 @@ def _hashable_padding(padding):
 def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
            impl: str = "auto", interpret: bool | None = None,
            out_dtype=None, qcfg: LogQuantConfig | None = None,
-           config: dict | None = None, autotune: bool = False):
+           config: ConvConfig | dict | None = None, autotune: bool = False):
     """x: [B, H, W, Cin] ⊛ dequant(qt [K, K, Cin//groups, Cout]) → NHWC out.
 
     The single entry point of the three-tier conv stack (see
     `kernels/log_conv2d.py`): ``impl="pallas"`` is the fused
     implicit-im2col kernel (block sizes from the autotuner's on-disk table
-    when present, heuristics otherwise; ``config=`` overrides,
-    ``autotune=True`` measures candidates for this shape first and
-    persists the winner), ``"pallas_im2col"`` the explicit-im2col
-    fallback on `log_matmul_pallas`, ``"blockwise"`` the jnp fallback,
-    ``"ref"`` the full-materialisation oracle; `auto` means pallas on TPU
-    and blockwise elsewhere.  `qt` is a `QuantizedTensor` of packed log
-    codes (per-output-channel scales supported; the serving-time
-    ``layout="conv_taps"`` pre-reshape is accepted); a plain float array
-    is packed on the fly as a convenience (inference only — quantization
-    is not differentiable).  Supports stride, SAME/VALID/explicit padding,
-    and grouped/depthwise convs (``groups=Cin``).
+    when present, heuristics otherwise; ``config=`` — a `ConvConfig` or
+    plain dict — overrides, ``autotune=True`` measures candidates for
+    this shape first and persists the winner), ``"pallas_im2col"`` the
+    explicit-im2col fallback on `log_matmul_pallas`, ``"blockwise"`` the
+    jnp fallback, ``"ref"`` the full-materialisation oracle; `auto` means
+    pallas on TPU and blockwise elsewhere.  `qt` is a `QuantizedTensor`
+    of packed log codes (per-output-channel scales supported; the
+    serving-time ``layout="conv_taps"`` pre-reshape is accepted); a plain
+    float array is packed on the fly as a convenience (inference only —
+    quantization is not differentiable).  Supports stride,
+    SAME/VALID/explicit padding, and grouped/depthwise convs
+    (``groups=Cin``).
     """
     if not isinstance(qt, QuantizedTensor):
         qt = quantize_tensor(jnp.asarray(qt), qcfg or LogQuantConfig())
@@ -120,12 +188,12 @@ def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
         packed = packed.reshape(qt.shape)  # [taps, cin_g, Cout] → 4-D HWIO
     assert packed.ndim == 4, f"conv weights must be [K,K,Cin_g,Cout], " \
         f"got {packed.shape}"
-    impl = _resolve_conv(impl)
+    impl, interp = resolve_impl("conv2d", impl, interpret)
     padding = _hashable_padding(padding)
+    config = _conv_config_dict(config)
     kw = dict(stride=stride, padding=padding, groups=groups,
               out_dtype=out_dtype)
     if impl in ("pallas", "pallas_im2col"):
-        interp = (not _on_tpu()) if interpret is None else interpret
         if impl == "pallas_im2col":
             return log_conv2d_pallas(x, packed, qt.scale, qt.cfg,
                                      interpret=interp, **kw)
@@ -230,19 +298,61 @@ def _blockwise_attention(q, k, v, *, causal, window, scale, q_offset,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
-def attention(q, k, v, *, causal: bool = True, window: int | None = None,
-              scale=None, q_offset: int = 0, k_offset=0, impl: str = "auto",
-              block_k: int = 1024, interpret: bool | None = None,
-              acc_dtype=jnp.float32, gqa_broadcast: bool = False):
-    """GQA attention.  q: [B, Tq, H, D]; k, v: [B, Tk, Hkv, D].
+_UNSET = object()  # legacy-kwarg sentinel: distinguishes "not passed"
 
-    q_offset/k_offset may be traced scalars (decode); the Pallas path
-    requires static offsets, so dynamic-offset calls dispatch to blockwise.
+_LEGACY_ATTN_FIELDS = ("block_k", "acc_dtype", "gqa_broadcast")
+
+
+def _translate_legacy_attn_kwargs(config, legacy: dict):
+    """One-release deprecation shim: `block_k=`/`acc_dtype=`/
+    `gqa_broadcast=` become `AttentionConfig` fields."""
+    passed = {n: v for n, v in legacy.items() if v is not _UNSET}
+    if not passed:
+        return config or AttentionConfig()
+    warnings.warn(
+        f"ops.attention({', '.join(sorted(passed))}=…) is deprecated; pass "
+        f"config=AttentionConfig(...) instead (legacy kwargs are removed "
+        f"next release)", DeprecationWarning, stacklevel=3)
+    if config is not None:
+        raise ValueError("pass either config=AttentionConfig(...) or the "
+                         f"legacy kwargs {sorted(passed)}, not both")
+    return AttentionConfig(**passed)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale=None, q_offset=0, k_offset=0, impl: str = "auto",
+              config: AttentionConfig | None = None, autotune: bool = False,
+              interpret: bool | None = None, block_k=_UNSET,
+              acc_dtype=_UNSET, gqa_broadcast=_UNSET):
+    """GQA/MQA attention.  q: [B, Tq, H, D]; k, v: [B, Tk, Hkv, D] with H a
+    multiple of Hkv.
+
+    The Pallas impl is GQA-native: an explicit kv-head grid dimension
+    loads each kv head's K/V tiles into VMEM once and broadcasts them
+    across its H/Hkv query heads, so K/V HBM traffic scales with Hkv (no
+    `jnp.repeat` anywhere).  `q_offset`/`k_offset` may be traced scalars
+    (decode at a dynamic cache index) on every impl — the kernel takes
+    them as scalar-prefetch operands.
+
+    Block sizes come from ``config=AttentionConfig(...)``; fields left at
+    None are filled from the autotune table (``autotune=True`` measures
+    candidates for this shape first) or heuristics.  ``block_k=`` /
+    ``acc_dtype=`` / ``gqa_broadcast=`` remain accepted as deprecated
+    aliases for one release.
     """
-    impl = _resolve(impl)
-    dynamic = not (isinstance(q_offset, int) and isinstance(k_offset, int))
-    if impl == "pallas" and (dynamic or k_offset != 0):
-        impl = "blockwise"
+    config = _translate_legacy_attn_kwargs(
+        config, dict(block_k=block_k, acc_dtype=acc_dtype,
+                     gqa_broadcast=gqa_broadcast))
+    B, Tq, H, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    if k.shape != v.shape or k.shape[0] != B or k.shape[3] != D:
+        raise ValueError(f"inconsistent attention operands: q {q.shape}, "
+                         f"k {k.shape}, v {v.shape}")
+    if Hkv == 0 or H % Hkv != 0:
+        raise ValueError(
+            f"GQA requires query heads divisible by kv heads; got H={H} "
+            f"query heads vs Hkv={Hkv} kv heads (q {q.shape}, k {k.shape})")
+    impl, interp = resolve_impl("attention", impl, interpret)
     if impl == "ref":
         return _ref.ref_attention(q, k, v, causal=causal, window=window,
                                   scale=scale, q_offset=q_offset,
@@ -250,26 +360,29 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
     if impl == "blockwise":
         return _blockwise_attention(q, k, v, causal=causal, window=window,
                                     scale=scale, q_offset=q_offset,
-                                    k_offset=k_offset, block_k=block_k,
-                                    acc_dtype=acc_dtype,
-                                    gqa_broadcast=gqa_broadcast)
-    # pallas: fold GQA + batch into BH
-    B, Tq, H, D = q.shape
-    Hkv = k.shape[2]
-    rep = H // Hkv
-    if rep > 1:
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
-    qq = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, D)
-    kk = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
-    vv = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
-    interp = (not _on_tpu()) if interpret is None else interpret
-    bq = min(128, max(16, Tq))
-    out = flash_attention_pallas(qq, kk, vv, causal=causal, window=window,
-                                 scale=scale, q_offset=q_offset,
-                                 block_q=bq, block_k=min(128, kk.shape[1]),
-                                 interpret=interp)
-    return out.reshape(B, H, Tq, D).transpose(0, 2, 1, 3)
+                                    k_offset=k_offset,
+                                    block_k=config.block_k or 1024,
+                                    acc_dtype=config.acc_dtype,
+                                    gqa_broadcast=config.gqa_broadcast)
+    # pallas (GQA-native; dynamic offsets ride the scalar-prefetch operand)
+    bq, bk = config.block_q, config.block_k
+    if bq is None or bk is None:
+        if autotune:
+            tuned = _autotune.autotune_attention(
+                q, k, v, causal=causal, window=window, scale=scale,
+                interpret=interp)
+        else:
+            key = _autotune.attention_key(
+                B, Tq, Tk, H, Hkv, D, causal=causal, window=window,
+                backend=("interpret" if interp else None))
+            tuned = _autotune.lookup(key) or \
+                _autotune.default_attention_config(B, Tq, Tk, H, Hkv, D)
+        bq = bq if bq is not None else tuned["block_q"]
+        bk = bk if bk is not None else tuned["block_k"]
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset,
+                                  k_offset=k_offset, block_q=bq,
+                                  block_k=bk, interpret=interp)
 
 
 # ---------------------------------------------------------------------------
@@ -277,12 +390,15 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
 # ---------------------------------------------------------------------------
 
 
-def wkv6(r, k, v, logw, u, state=None, *, impl: str = "auto", chunk: int = 64,
+def wkv6(r, k, v, logw, u, state=None, *, impl: str = "auto",
+         config: WkvConfig | None = None, chunk: int | None = None,
          interpret: bool | None = None):
-    impl = _resolve(impl)
+    """RWKV6 WKV.  ``config=WkvConfig(chunk=…)`` is the spec'd surface;
+    ``chunk=`` stays as a positional-friendly alias."""
+    impl, interp = resolve_impl("wkv6", impl, interpret)
+    chunk = chunk if chunk is not None else (config or WkvConfig()).chunk
     if impl == "ref":
         return _ref.ref_wkv6(r, k, v, logw, u, state)
     if impl == "blockwise":
         return wkv6_chunked_jnp(r, k, v, logw, u, state, chunk=chunk)
-    interp = (not _on_tpu()) if interpret is None else interpret
     return wkv6_pallas(r, k, v, logw, u, state, chunk=chunk, interpret=interp)

@@ -10,6 +10,8 @@ Cache layouts:
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -81,20 +83,18 @@ def attention_mixer(p, h, cfg, *, kind="attn", positions, cache=None,
     window = cfg.attn_window if kind == "local" else None
     q, k, v = _qkv(p, h, cfg, positions)
     B, T = h.shape[:2]
-    bk = cfg.attn_block_k
+    acfg = ops.AttentionConfig(block_k=cfg.attn_block_k,
+                               acc_dtype=cfg.attn_acc_dtype,
+                               gqa_broadcast=cfg.gqa_broadcast)
 
     if cache is None:
         out = ops.attention(q, k, v, causal=True, window=window,
-                            impl=cfg.attn_impl, block_k=bk,
-                            acc_dtype=cfg.attn_acc_dtype,
-                            gqa_broadcast=cfg.gqa_broadcast)
+                            impl=cfg.attn_impl, config=acfg)
         new_cache = None
 
     elif T > 1:  # prefill
         out = ops.attention(q, k, v, causal=True, window=window,
-                            impl=cfg.attn_impl, block_k=bk,
-                            acc_dtype=cfg.attn_acc_dtype,
-                            gqa_broadcast=cfg.gqa_broadcast)
+                            impl=cfg.attn_impl, config=acfg)
         S = cache["k"].shape[1]
         if S >= T:  # cache holds the whole chunk
             ck = jax.lax.dynamic_update_slice_in_dim(
@@ -123,17 +123,17 @@ def attention_mixer(p, h, cfg, *, kind="attn", positions, cache=None,
             idxs = (jnp.arange(S) + slot + 1) % S
             ck_l = jnp.take(ck, idxs, axis=1)
             cv_l = jnp.take(cv, idxs, axis=1)
+            dcfg = dataclasses.replace(acfg,
+                                       block_k=min(cfg.attn_block_k, S))
             out = ops.attention(q, ck_l, cv_l, causal=True, window=window,
                                 q_offset=index, k_offset=index - S + 1,
-                                impl=cfg.attn_impl, block_k=min(bk, S),
-                                acc_dtype=cfg.attn_acc_dtype,
-                                gqa_broadcast=cfg.gqa_broadcast)
+                                impl=cfg.attn_impl, config=dcfg)
         else:
+            dcfg = dataclasses.replace(acfg,
+                                       block_k=min(cfg.attn_block_k, S))
             out = ops.attention(q, ck, cv, causal=True, window=window,
                                 q_offset=index, impl=cfg.attn_impl,
-                                block_k=min(bk, S),
-                                acc_dtype=cfg.attn_acc_dtype,
-                                gqa_broadcast=cfg.gqa_broadcast)
+                                config=dcfg)
 
     if cfg.attn_shard == "heads":
         out = sharding.constrain(out, ("batch", None, "tensor", None))

@@ -50,6 +50,11 @@ class EngineConfig:
     max_len: int = 256                 # cache capacity (prompt + generation)
     eos_id: int = -1                   # -1: never stop on a token
     cache_dtype: Any = jnp.float32
+    # override the model's attention dispatch for serving (None: keep the
+    # model config's attn_impl).  Decode positions are traced scalars —
+    # the Pallas kernel takes them as scalar-prefetch operands, so
+    # "pallas" is a valid serving impl, not just "blockwise"/"ref".
+    attn_impl: str | None = None
 
 
 def _has_recurrence(cfg) -> bool:
@@ -69,6 +74,8 @@ class ServeEngine:
             raise ValueError("engine serves token archs; frontend-stub archs "
                              "(musicgen) are driven via launch/serve.py "
                              "embeddings path")
+        if ecfg.attn_impl is not None:
+            cfg = dataclasses.replace(cfg, attn_impl=ecfg.attn_impl)
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         B, L = ecfg.max_batch, ecfg.max_len
         self.cache = transformer.init_cache(cfg, B, L, ecfg.cache_dtype)

@@ -44,6 +44,24 @@ def test_engine_matches_naive_greedy(arch):
     assert done[0].output == ref
 
 
+def test_engine_pallas_attention_decode():
+    """EngineConfig(attn_impl="pallas") serves decode on the Pallas kernel:
+    per-slot positions are traced scalars riding the kernel's
+    scalar-prefetch operand (vmapped across slots), so generations match
+    the blockwise engine exactly."""
+    cfg, params = _make("gemma-2b")
+    prompt = np.array([5, 17, 42, 7, 99], np.int32)
+    outs = {}
+    for impl in (None, "pallas"):
+        eng = ServeEngine(cfg, params,
+                          EngineConfig(max_batch=2, max_prompt=16,
+                                       max_len=32, attn_impl=impl))
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+        outs[impl] = eng.run()[0].output
+    assert eng.cfg.attn_impl == "pallas"
+    assert outs[None] == outs["pallas"]
+
+
 def test_engine_ragged_batch_isolation():
     """Two prompts of different lengths decode exactly as they would alone."""
     cfg, params = _make("gemma-2b")
