@@ -13,7 +13,7 @@ import sys
 
 from . import (ablation_grad_compress, attention_kernels, conv_kernels,
                fig1_quant, fig17_pe_cost, fig19_utilization, fig20_throughput,
-               table2_comparison, table3_latency)
+               table2_comparison, table3_latency, telemetry_overhead)
 from .common import timed
 
 BENCHES = {
@@ -26,11 +26,13 @@ BENCHES = {
     "table2_comparison": (table2_comparison, "peak_gops"),
     "table3_latency": (table3_latency, "total_ms"),
     "ablation_grad_compress": (ablation_grad_compress, "ef_gap"),
+    "telemetry_overhead": (telemetry_overhead, "overhead_pct"),
 }
 
 
 ALIASES = {"conv": "conv_kernels",  # short names accepted by --only
-           "attention": "attention_kernels"}
+           "attention": "attention_kernels",
+           "telemetry": "telemetry_overhead"}
 
 
 def main(argv=None) -> int:

@@ -1,7 +1,14 @@
 """Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
-records.
+records, and render live-telemetry snapshots.
 
     PYTHONPATH=src python -m repro.analysis.report --dir results/dryrun
+    PYTHONPATH=src python -m repro.analysis.report --metrics snapshot.json
+
+``--metrics`` takes a JSON snapshot (`ServeEngine.metrics_snapshot()` or
+the kernel profiler's `snapshot()`) and prints the per-op utilization
+table — analytic bytes moved vs achieved bandwidth against the HBM
+roofline, echoing the paper's per-layer utilization analysis (§V) from
+*measured* dispatches instead of offline benchmarks.
 """
 
 from __future__ import annotations
@@ -13,7 +20,7 @@ from collections import defaultdict
 
 from ..configs.base import SHAPES
 from ..configs.registry import ARCH_NAMES
-from .roofline import from_record, load_records
+from .roofline import HBM_BW, from_record, load_records
 
 
 def dryrun_table(recs: list[dict]) -> str:
@@ -95,15 +102,89 @@ def summary(recs: list[dict]) -> str:
     return "\n".join(out)
 
 
+def _fmt_bytes(n) -> str:
+    if n >= 2**20:
+        return f"{n/2**20:.2f} MiB"
+    return f"{n/2**10:.1f} KiB"
+
+
+def per_op_utilization_table(snap: dict) -> str:
+    """Per-dispatch utilization rows from a telemetry snapshot: analytic
+    bytes moved (the paper's traffic accounting) over measured steady time
+    → achieved GB/s, as a fraction of the HBM roofline."""
+    recs = snap.get("kernels", snap).get("records", [])
+    lines = ["| op | impl | shape key | calls | bytes moved | steady µs | "
+             "GB/s | %HBM roofline | timing |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["op"], r["impl"], r["key"])):
+        total = (r.get("bytes") or {}).get("total", 0)
+        calls = r.get("calls", 0) + r.get("traced_calls", 0)
+        us = r.get("steady_us")
+        if us:
+            gbps = total / (us * 1e-6) / 1e9
+            util = f"{100 * gbps * 1e9 / HBM_BW:.2f}%"
+            us_s, gb_s = f"{us:.1f}", f"{gbps:.3f}"
+        else:
+            us_s, gb_s, util = "—", "—", "—"
+        lines.append(f"| {r['op']} | {r['impl']} | `{r['key']}` | {calls} "
+                     f"| {_fmt_bytes(total)} | {us_s} | {gb_s} | {util} "
+                     f"| {r.get('steady_source') or '—'} |")
+    return "\n".join(lines)
+
+
+def _histogram_rows(hists: dict) -> str:
+    lines = ["| metric | count | mean | p50 | p90 | p99 |",
+             "|---|---|---|---|---|---|"]
+    for name, h in sorted(hists.items()):
+        lines.append(f"| {name} | {h['count']} | {h['mean']:.4g} "
+                     f"| {h['p50']:.4g} | {h['p90']:.4g} | {h['p99']:.4g} |")
+    return "\n".join(lines)
+
+
+def metrics_report(snap: dict) -> str:
+    """Full rendering of a telemetry snapshot: engine latency histograms,
+    per-op utilization, program timings, autotune hit/miss."""
+    out = ["## §Telemetry — per-op utilization (measured dispatches)", "",
+           per_op_utilization_table(snap)]
+    progs = snap.get("kernels", snap).get("programs", {})
+    if progs:
+        out += ["", "### Programs (jitted engine calls)", "",
+                "| program | calls | first (compile) µs | steady µs |",
+                "|---|---|---|---|"]
+        for name, p in sorted(progs.items()):
+            steady = f"{p['steady_us']:.1f}" if p.get("steady_us") else "—"
+            out.append(f"| {name} | {p['calls']} | {p['first_us']:.1f} "
+                       f"| {steady} |")
+    hists = snap.get("engine", {}).get("histograms", {})
+    if hists:
+        out += ["", "### Engine latency (seconds / tokens-per-s)", "",
+                _histogram_rows(hists)]
+    counters = snap.get("global", {}).get("counters", {})
+    tuned = {k: v for k, v in counters.items() if "autotune" in k}
+    if tuned:
+        out += ["", "### Autotune table", ""]
+        out += [f"- {k}: {v}" for k, v in sorted(tuned.items())]
+    return "\n".join(out) + "\n"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--out", default="")
+    ap.add_argument("--metrics", default="",
+                    help="telemetry snapshot JSON (metrics_snapshot()); "
+                         "prints the per-op utilization report instead of "
+                         "the dry-run tables")
     args = ap.parse_args()
-    recs = load_records(args.dir)
-    text = ("## §Dry-run\n\n" + summary(recs) + "\n\n"
-            + dryrun_table(recs) + "\n\n## §Roofline (single-pod, 256 chips)"
-            + "\n\n" + roofline_table(recs) + "\n")
+    if args.metrics:
+        with open(args.metrics) as f:
+            text = metrics_report(json.load(f))
+    else:
+        recs = load_records(args.dir)
+        text = ("## §Dry-run\n\n" + summary(recs) + "\n\n"
+                + dryrun_table(recs)
+                + "\n\n## §Roofline (single-pod, 256 chips)"
+                + "\n\n" + roofline_table(recs) + "\n")
     if args.out:
         with open(args.out, "w") as f:
             f.write(text)

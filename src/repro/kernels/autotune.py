@@ -39,6 +39,7 @@ import time
 import jax
 
 from repro.core.logquant import LogQuantConfig
+from repro.obs import metrics as _obs_metrics
 from .flash_attention import flash_attention_pallas
 from .log_conv2d import (fused_conv_geometry, log_conv2d_fused_pallas,
                          normalize_padding)
@@ -110,6 +111,12 @@ def attention_key(B, Tq, Tk, H, Hkv, D, *, causal=True, window=None,
 
 def lookup(key: str) -> dict | None:
     entry = _load()["entries"].get(key)
+    # per-op hit/miss counters: a warm table is a latency feature, so its
+    # effectiveness is a first-class metric (`autotune_lookup` in the
+    # default registry, surfaced by `metrics_snapshot()`/--metrics).
+    _obs_metrics.REGISTRY.counter(
+        "autotune_lookup", op=key.split("|", 1)[0],
+        result=("hit" if entry else "miss")).inc()
     return dict(entry["config"]) if entry else None
 
 

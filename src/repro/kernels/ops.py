@@ -35,11 +35,13 @@ import jax.numpy as jnp
 
 from repro.core.logquant import (LogQuantConfig, QuantizedTensor,
                                  quantize_tensor)
+from repro.obs import kernel_profile as _kprof
 from . import autotune as _autotune
 from . import ref as _ref
-from .flash_attention import flash_attention_pallas
-from .log_conv2d import (log_conv2d_blockwise, log_conv2d_fused_pallas,
-                         log_conv2d_pallas, log_conv2d_ref)
+from .flash_attention import attention_traffic_bytes, flash_attention_pallas
+from .log_conv2d import (conv_traffic_bytes, log_conv2d_blockwise,
+                         log_conv2d_fused_pallas, log_conv2d_pallas,
+                         log_conv2d_ref)
 from .log_matmul import log_matmul_pallas
 from .wkv6 import wkv6_chunked_jnp, wkv6_pallas
 
@@ -122,6 +124,17 @@ def _conv_config_dict(config) -> dict | None:
     return dict(config)
 
 
+def _itemsize(x) -> int:
+    try:
+        return jnp.dtype(x.dtype).itemsize
+    except TypeError:  # pragma: no cover - non-array convenience inputs
+        return 4
+
+
+def _profile_backend(interp: bool) -> str:
+    return "interpret" if interp else jax.default_backend()
+
+
 # ---------------------------------------------------------------------------
 # log_matmul
 # ---------------------------------------------------------------------------
@@ -137,13 +150,24 @@ def log_matmul(x, qt: QuantizedTensor, *, impl: str = "auto",
     scale = jnp.broadcast_to(jnp.asarray(qt.scale, jnp.float32),
                              (1, qt.packed.shape[-1]))
     if impl == "pallas":
-        out = log_matmul_pallas(x2, qt.packed, scale, qt.cfg,
-                                interpret=interp, out_dtype=x.dtype)
+        call = lambda: log_matmul_pallas(x2, qt.packed, scale, qt.cfg,
+                                         interpret=interp, out_dtype=x.dtype)
     else:
         # blockwise == ref for a matmul: XLA fuses decode into the dot's
         # operand; weight bytes moved stay int8.
-        out = _ref.ref_log_matmul(x2, qt.packed, scale, qt.cfg,
-                                  out_dtype=x.dtype)
+        call = lambda: _ref.ref_log_matmul(x2, qt.packed, scale, qt.cfg,
+                                           out_dtype=x.dtype)
+    if _kprof.PROFILER.enabled():
+        M, N = x2.shape[0], qt.packed.shape[-1]
+        it = _itemsize(x)
+        act, w, outb = M * K * it, K * N, M * N * it  # codes move as int8
+        traffic = {"act": act, "w": w, "out": outb,
+                   "total": act + w + outb}
+        key = f"log_matmul|{_profile_backend(interp)}|m{M}|k{K}|n{N}"
+        out = _kprof.dispatch("log_matmul", impl, key, traffic, call,
+                              traced=_kprof.is_traced(x))
+    else:
+        out = call()
     return out.reshape(*lead, -1)
 
 
@@ -193,13 +217,10 @@ def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
     config = _conv_config_dict(config)
     kw = dict(stride=stride, padding=padding, groups=groups,
               out_dtype=out_dtype)
-    if impl in ("pallas", "pallas_im2col"):
-        if impl == "pallas_im2col":
-            return log_conv2d_pallas(x, packed, qt.scale, qt.cfg,
-                                     interpret=interp, **kw)
-        B, H, W, C = x.shape
-        K, Cout = packed.shape[0], packed.shape[-1]
-        shape_kw = dict(stride=stride, padding=padding, groups=groups)
+    B, H, W, C = x.shape
+    K, Cout = packed.shape[0], packed.shape[-1]
+    shape_kw = dict(stride=stride, padding=padding, groups=groups)
+    if impl == "pallas":
         if config is None and autotune:
             config = _autotune.autotune_conv2d(
                 x, packed, qt.scale, qt.cfg, interpret=interp, **shape_kw)
@@ -209,11 +230,29 @@ def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
                 backend=("interpret" if interp else None))
             config = _autotune.lookup(key) or _autotune.default_config(
                 B, H, W, C, K, Cout, **shape_kw)
-        return log_conv2d_fused_pallas(x, packed, qt.scale, qt.cfg,
-                                       interpret=interp, **kw, **config)
-    if impl == "ref":
-        return log_conv2d_ref(x, packed, qt.scale, qt.cfg, **kw)
-    return log_conv2d_blockwise(x, packed, qt.scale, qt.cfg, **kw)
+        tuned = config
+        call = lambda: log_conv2d_fused_pallas(x, packed, qt.scale, qt.cfg,
+                                               interpret=interp, **kw,
+                                               **tuned)
+    elif impl == "pallas_im2col":
+        call = lambda: log_conv2d_pallas(x, packed, qt.scale, qt.cfg,
+                                         interpret=interp, **kw)
+    elif impl == "ref":
+        call = lambda: log_conv2d_ref(x, packed, qt.scale, qt.cfg, **kw)
+    else:
+        call = lambda: log_conv2d_blockwise(x, packed, qt.scale, qt.cfg,
+                                            **kw)
+    if not _kprof.PROFILER.enabled():
+        return call()
+    # the oracle materialises full-precision patches: model it as "fp32"
+    traffic_impl = {"ref": "fp32"}.get(impl, impl)
+    traffic = conv_traffic_bytes(
+        traffic_impl, B, H, W, C, K, Cout, **shape_kw,
+        config=(config if impl == "pallas" else None))
+    key = _autotune.conv_key(B, H, W, C, K, Cout, cfg=qt.cfg, **shape_kw,
+                             backend=_profile_backend(interp))
+    return _kprof.dispatch("conv2d", impl, key, traffic, call,
+                           traced=_kprof.is_traced(x, packed))
 
 
 # ---------------------------------------------------------------------------
@@ -353,36 +392,50 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
             f"GQA requires query heads divisible by kv heads; got H={H} "
             f"query heads vs Hkv={Hkv} kv heads (q {q.shape}, k {k.shape})")
     impl, interp = resolve_impl("attention", impl, interpret)
+    traffic_kw = {}
     if impl == "ref":
-        return _ref.ref_attention(q, k, v, causal=causal, window=window,
-                                  scale=scale, q_offset=q_offset,
-                                  k_offset=k_offset)
-    if impl == "blockwise":
-        return _blockwise_attention(q, k, v, causal=causal, window=window,
-                                    scale=scale, q_offset=q_offset,
-                                    k_offset=k_offset,
-                                    block_k=config.block_k or 1024,
-                                    acc_dtype=config.acc_dtype,
-                                    gqa_broadcast=config.gqa_broadcast)
-    # pallas (GQA-native; dynamic offsets ride the scalar-prefetch operand)
-    bq, bk = config.block_q, config.block_k
-    if bq is None or bk is None:
-        if autotune:
-            tuned = _autotune.autotune_attention(
-                q, k, v, causal=causal, window=window, scale=scale,
-                interpret=interp)
-        else:
-            key = _autotune.attention_key(
-                B, Tq, Tk, H, Hkv, D, causal=causal, window=window,
-                backend=("interpret" if interp else None))
-            tuned = _autotune.lookup(key) or \
-                _autotune.default_attention_config(B, Tq, Tk, H, Hkv, D)
-        bq = bq if bq is not None else tuned["block_q"]
-        bk = bk if bk is not None else tuned["block_k"]
-    return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  scale=scale, q_offset=q_offset,
-                                  k_offset=k_offset, block_q=bq,
-                                  block_k=bk, interpret=interp)
+        call = lambda: _ref.ref_attention(q, k, v, causal=causal,
+                                          window=window, scale=scale,
+                                          q_offset=q_offset,
+                                          k_offset=k_offset)
+    elif impl == "blockwise":
+        call = lambda: _blockwise_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, k_offset=k_offset,
+            block_k=config.block_k or 1024, acc_dtype=config.acc_dtype,
+            gqa_broadcast=config.gqa_broadcast)
+    else:
+        # pallas (GQA-native; dynamic offsets ride the scalar-prefetch
+        # operand)
+        bq, bk = config.block_q, config.block_k
+        if bq is None or bk is None:
+            if autotune:
+                tuned = _autotune.autotune_attention(
+                    q, k, v, causal=causal, window=window, scale=scale,
+                    interpret=interp)
+            else:
+                key = _autotune.attention_key(
+                    B, Tq, Tk, H, Hkv, D, causal=causal, window=window,
+                    backend=("interpret" if interp else None))
+                tuned = _autotune.lookup(key) or \
+                    _autotune.default_attention_config(B, Tq, Tk, H, Hkv, D)
+            bq = bq if bq is not None else tuned["block_q"]
+            bk = bk if bk is not None else tuned["block_k"]
+        traffic_kw = dict(block_q=bq, block_k=bk)
+        call = lambda: flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, k_offset=k_offset, block_q=bq, block_k=bk,
+            interpret=interp)
+    if not _kprof.PROFILER.enabled():
+        return call()
+    traffic = attention_traffic_bytes(impl, B, Tq, Tk, H, Hkv, D,
+                                      itemsize=_itemsize(q), **traffic_kw)
+    key = _autotune.attention_key(B, Tq, Tk, H, Hkv, D, causal=causal,
+                                  window=window,
+                                  backend=_profile_backend(interp))
+    return _kprof.dispatch(
+        "attention", impl, key, traffic, call,
+        traced=_kprof.is_traced(q, k, v, q_offset, k_offset))
 
 
 # ---------------------------------------------------------------------------
@@ -398,7 +451,23 @@ def wkv6(r, k, v, logw, u, state=None, *, impl: str = "auto",
     impl, interp = resolve_impl("wkv6", impl, interpret)
     chunk = chunk if chunk is not None else (config or WkvConfig()).chunk
     if impl == "ref":
-        return _ref.ref_wkv6(r, k, v, logw, u, state)
-    if impl == "blockwise":
-        return wkv6_chunked_jnp(r, k, v, logw, u, state, chunk=chunk)
-    return wkv6_pallas(r, k, v, logw, u, state, chunk=chunk, interpret=interp)
+        call = lambda: _ref.ref_wkv6(r, k, v, logw, u, state)
+    elif impl == "blockwise":
+        call = lambda: wkv6_chunked_jnp(r, k, v, logw, u, state, chunk=chunk)
+    else:
+        call = lambda: wkv6_pallas(r, k, v, logw, u, state, chunk=chunk,
+                                   interpret=interp)
+    if not _kprof.PROFILER.enabled():
+        return call()
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    it = _itemsize(r)
+    rkw = 3 * B * T * H * K * it            # r, k and per-step decay logw
+    vb = 2 * B * T * H * V * it             # v in, wkv out
+    st = 2 * B * H * K * V * 4              # state read + write (f32)
+    traffic = {"rkw": rkw, "v": vb, "state": st, "u": H * K * it,
+               "total": rkw + vb + st + H * K * it}
+    key = (f"wkv6|{_profile_backend(interp)}|b{B}|t{T}|h{H}|k{K}|v{V}"
+           f"|c{chunk}")
+    return _kprof.dispatch("wkv6", impl, key, traffic, call,
+                           traced=_kprof.is_traced(r, k, v, logw, u, state))

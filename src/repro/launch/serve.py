@@ -12,8 +12,12 @@ import time
 import jax
 import numpy as np
 
+import json
+import os
+
 from ..configs.registry import ARCH_NAMES, get_config
 from ..models import sharding, transformer
+from ..obs import trace as obs_trace
 from ..serving.engine import EngineConfig, Request, ServeEngine
 from .mesh import make_host_mesh, make_production_mesh
 
@@ -30,6 +34,13 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="write the Chrome trace here after the run "
+                         "(requires REPRO_TRACE=1 or --telemetry on)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write engine.metrics_snapshot() JSON here")
+    ap.add_argument("--telemetry", choices=["auto", "on", "off"],
+                    default="auto")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -41,7 +52,7 @@ def main(argv=None):
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
     engine = ServeEngine(cfg, params, EngineConfig(
         max_batch=args.max_batch, max_prompt=args.max_prompt,
-        max_len=args.max_len))
+        max_len=args.max_len, telemetry=args.telemetry))
 
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
@@ -60,6 +71,22 @@ def main(argv=None):
     for r in done[: 4]:
         print(f"  req {r.uid}: prompt[:4]={list(r.prompt[:4])} "
               f"→ {r.output[:8]}…")
+    snap = engine.metrics_snapshot()
+    ttft = snap["engine"]["histograms"].get("serve_ttft_s", {})
+    if ttft.get("count"):
+        tps = snap["engine"]["histograms"]["serve_tokens_per_s"]
+        print(f"  ttft p50 {ttft['p50']*1e3:.1f}ms p99 {ttft['p99']*1e3:.1f}"
+              f"ms  per-req tok/s p50 {tps['p50']:.1f}")
+    if args.metrics_out:
+        d = os.path.dirname(args.metrics_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True, default=str)
+        print(f"  metrics snapshot → {args.metrics_out}")
+    if args.trace_out:
+        obs_trace.export_chrome_trace(args.trace_out)
+        print(f"  chrome trace → {args.trace_out}")
     return done
 
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from ..configs.registry import ARCH_NAMES, get_config
 from ..data.pipeline import DataConfig, ShardedLoader
 from ..models import sharding, transformer
+from ..obs import metrics as obs_metrics
 from ..runtime.checkpoint import CheckpointManager
 from ..runtime.monitor import HeartbeatMonitor
 from ..training.optimizer import OptimizerConfig
@@ -93,21 +94,30 @@ def main(argv=None):
     else:
         params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    def heartbeat(step, st, metrics):
-        monitor.record(f"host{jax.process_index()}", step,
-                       metrics.get("wall_s", 0.0))
+    def progress(step, st, metrics):
         print(f"step {step:5d}  loss {metrics['loss']:.4f}  "
               f"gnorm {metrics['grad_norm']:.3f}  "
               f"wall {metrics['wall_s']:.1f}s")
-    hooks.append(heartbeat)
+    hooks.append(progress)
 
+    # heartbeats + the step-time histogram are fed from train()'s single
+    # per-step event stream (not a separate hook clock)
+    registry = obs_metrics.MetricsRegistry()
     state, history = train(loss_fn, params, loader, tcfg,
                            num_steps=args.steps - start_step,
-                           start_step=start_step, state=state, hooks=hooks)
+                           start_step=start_step, state=state, hooks=hooks,
+                           metrics=registry, monitor=monitor,
+                           host=f"host{jax.process_index()}")
     if args.ckpt_dir:
         mgr.save(int(state["step"]), state, sync=True)
     print(f"final loss {history[-1]['loss']:.4f} "
           f"(from {history[0]['loss']:.4f})")
+    hist = registry.snapshot()["histograms"].get("train_step_s")
+    if hist and hist["count"]:
+        rep = monitor.report(int(state["step"]))
+        print(f"step time p50 {hist['p50']*1e3:.1f}ms p99 "
+              f"{hist['p99']*1e3:.1f}ms over {hist['count']} steps; "
+              f"stragglers={list(rep.stragglers)} missing={rep.missing}")
     return history
 
 

@@ -1,0 +1,21 @@
+"""Runtime telemetry: span tracing, metrics, kernel-dispatch profiling.
+
+Three cooperating modules, all near-zero-cost until switched on:
+
+  `trace`           ring-buffer span tracer → Chrome-trace/Perfetto JSON
+                    (``REPRO_TRACE=1``, ``REPRO_TRACE_PATH=...``)
+  `metrics`         counters / gauges / log-bucketed histograms, JSON
+                    snapshot + Prometheus text exposition
+  `kernel_profile`  per-dispatch records behind `kernels/ops.py`: op,
+                    impl, shape key, analytic bytes moved, compile vs
+                    steady wall time (``REPRO_KERNEL_PROFILE=1`` or the
+                    trace gate)
+
+Consumers: `serving.engine.ServeEngine.metrics_snapshot()`,
+`training.train_loop.train(metrics=, monitor=)`, and
+``python -m repro.analysis.report --metrics <snapshot.json>``.
+"""
+
+from . import kernel_profile, metrics, trace  # noqa: F401
+
+__all__ = ["trace", "metrics", "kernel_profile"]

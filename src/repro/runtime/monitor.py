@@ -106,8 +106,11 @@ class RestartPolicy:
         if len(self._restarts) >= self.budget:
             return {"action": "abort", "reason": "restart budget exhausted"}
         self._restarts.append(now)
+        # a restart must also shed the stragglers seen in the same report,
+        # or the reshard lands the job right back on the slow hosts
+        exclude = sorted(set(report.missing) | set(report.stragglers))
         return {"action": "restart",
-                "exclude": report.missing,
+                "exclude": exclude,
                 "new_world": healthy,
                 "note": "restore latest checkpoint, reshard onto "
                         f"{healthy} hosts"}

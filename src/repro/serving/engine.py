@@ -21,7 +21,10 @@ Design (vLLM-style, adapted to JAX static shapes):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
+from collections import deque
 from typing import Any
 
 import jax
@@ -29,6 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer
+from ..obs import kernel_profile as obs_kprof
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -41,6 +47,9 @@ class Request:
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # host-clock lifecycle marks (perf_counter seconds), filled when
+    # telemetry is on: enqueue → prefill_start → first_token → retire
+    timeline: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +64,13 @@ class EngineConfig:
     # the Pallas kernel takes them as scalar-prefetch operands, so
     # "pallas" is a valid serving impl, not just "blockwise"/"ref".
     attn_impl: str | None = None
+    # "auto": timeline/histogram/span work follows the obs gates
+    # (REPRO_TRACE / REPRO_KERNEL_PROFILE); "on"/"off" force it.  The
+    # `stats` counters are always maintained (backwards-compat view).
+    telemetry: str = "auto"
+
+
+_NULL_CTX = contextlib.nullcontext()
 
 
 def _has_recurrence(cfg) -> bool:
@@ -76,6 +92,9 @@ class ServeEngine:
                              "embeddings path")
         if ecfg.attn_impl is not None:
             cfg = dataclasses.replace(cfg, attn_impl=ecfg.attn_impl)
+        if ecfg.telemetry not in ("auto", "on", "off"):
+            raise ValueError(f"telemetry must be auto|on|off, got "
+                             f"{ecfg.telemetry!r}")
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         B, L = ecfg.max_batch, ecfg.max_len
         self.cache = transformer.init_cache(cfg, B, L, ecfg.cache_dtype)
@@ -84,10 +103,22 @@ class ServeEngine:
         self.slot_req: list[Request | None] = [None] * B
         self.slot_pos = np.zeros(B, np.int32)      # next write position
         self.slot_last = np.zeros(B, np.int32)     # last emitted token
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()       # O(1) FIFO admission
         self.finished: list[Request] = []
-        self.stats = {"prefill_calls": 0, "decode_steps": 0,
-                      "tokens_out": 0}
+        # per-engine registry so concurrent engines (and tests) stay
+        # isolated; `stats` below is a compat view over these counters.
+        self.metrics = obs_metrics.MetricsRegistry()
+        self._c_prefill = self.metrics.counter("serve_prefill_calls")
+        self._c_decode = self.metrics.counter("serve_decode_steps")
+        self._c_tokens = self.metrics.counter("serve_tokens_out")
+        self._c_retired = self.metrics.counter("serve_requests_retired")
+        self._g_queue = self.metrics.gauge("serve_queue_depth")
+        self._g_slots = self.metrics.gauge("serve_slots_busy")
+        self._h_ttft = self.metrics.histogram("serve_ttft_s")
+        self._h_step = self.metrics.histogram("serve_decode_step_s")
+        self._h_prefill = self.metrics.histogram("serve_prefill_s")
+        self._h_tps = self.metrics.histogram(
+            "serve_tokens_per_s", bounds=obs_metrics.RATE_BUCKETS)
 
         cfg_ = cfg
 
@@ -124,13 +155,48 @@ class ServeEngine:
 
         self._decode_jit = jax.jit(_decode)
 
+    # ----------------------------------------------------------- telemetry
+    def _telemetry_on(self) -> bool:
+        mode = self.ecfg.telemetry
+        if mode == "off":
+            return False
+        if mode == "on":
+            return True
+        return obs_trace.TRACER.enabled() or obs_kprof.PROFILER.enabled()
+
+    @property
+    def stats(self) -> dict:
+        """Backwards-compatible counter view (always maintained)."""
+        return {"prefill_calls": int(self._c_prefill.value),
+                "decode_steps": int(self._c_decode.value),
+                "tokens_out": int(self._c_tokens.value)}
+
+    def metrics_snapshot(self) -> dict:
+        """One JSON-able dict with everything measured so far: the
+        engine's own registry (TTFT/tokens-per-s histograms, gauges,
+        counters), the process-wide kernel-dispatch records (per-op impl,
+        bytes moved, compile/steady µs), and the default registry
+        (autotune hit/miss, kernel-dispatch histograms)."""
+        return {"engine": self.metrics.snapshot(),
+                "stats": self.stats,
+                "kernels": obs_kprof.PROFILER.snapshot(),
+                "global": obs_metrics.REGISTRY.snapshot()}
+
     # ------------------------------------------------------------ plumbing
     def submit(self, req: Request):
         if len(req.prompt) > self.ecfg.max_prompt:
             raise ValueError("prompt longer than engine max_prompt")
         if len(req.prompt) < 1:
             raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{req.max_new_tokens} (request {req.uid})")
         self.queue.append(req)
+        if self._telemetry_on():
+            req.timeline["enqueue"] = time.perf_counter()
+            self._g_queue.set(len(self.queue))
+            obs_trace.instant("enqueue", uid=req.uid,
+                              prompt_len=len(req.prompt))
 
     def _free_slots(self):
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -139,31 +205,48 @@ class ServeEngine:
         for slot in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
+            tele = self._telemetry_on()
+            t0 = time.perf_counter() if tele else 0.0
             T = len(req.prompt)
-            Tpad = min(_next_pow2(T), self.ecfg.max_prompt) \
-                if self._pad_prefill else T
-            toks = np.zeros((1, Tpad), np.int32)
-            toks[0, :T] = req.prompt
-            # fresh zero sub-cache for the slot (kills stale recurrent state)
-            seg_slot = jax.tree.map(
-                lambda c: jnp.zeros((c.shape[0], 1) + c.shape[2:], c.dtype),
-                self.cache["segments"])
-            logits, new_seg = self._prefill_jit(
-                self.params, seg_slot, jnp.asarray(toks),
-                jnp.asarray(T, jnp.int32))
-            # scatter the slot back into the batched cache
-            self.cache["segments"] = jax.tree.map(
-                lambda full, new: jax.lax.dynamic_update_slice_in_dim(
-                    full, new.astype(full.dtype), slot, axis=1),
-                self.cache["segments"], new_seg)
-            tok = self._sample(logits[0], req)
-            self.slot_req[slot] = req
-            req.output.append(int(tok))
-            self.slot_pos[slot] = T
-            self.slot_last[slot] = int(tok)
-            self.stats["prefill_calls"] += 1
-            self.stats["tokens_out"] += 1
+            with obs_trace.span("prefill", uid=req.uid, slot=slot,
+                                tokens=T) if tele else _NULL_CTX:
+                if tele:
+                    req.timeline["prefill_start"] = t0
+                Tpad = min(_next_pow2(T), self.ecfg.max_prompt) \
+                    if self._pad_prefill else T
+                toks = np.zeros((1, Tpad), np.int32)
+                toks[0, :T] = req.prompt
+                # fresh zero sub-cache for the slot (kills stale recurrent
+                # state)
+                seg_slot = jax.tree.map(
+                    lambda c: jnp.zeros((c.shape[0], 1) + c.shape[2:],
+                                        c.dtype),
+                    self.cache["segments"])
+                run_prefill = lambda: self._prefill_jit(
+                    self.params, seg_slot, jnp.asarray(toks),
+                    jnp.asarray(T, jnp.int32))
+                logits, new_seg = (
+                    obs_kprof.PROFILER.time_program("prefill", run_prefill)
+                    if tele else run_prefill())
+                # scatter the slot back into the batched cache
+                self.cache["segments"] = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                        full, new.astype(full.dtype), slot, axis=1),
+                    self.cache["segments"], new_seg)
+                tok = self._sample(logits[0], req)
+                self.slot_req[slot] = req
+                req.output.append(int(tok))
+                self.slot_pos[slot] = T
+                self.slot_last[slot] = int(tok)
+            self._c_prefill.inc()
+            self._c_tokens.inc()
+            if tele:
+                now = time.perf_counter()
+                req.timeline["first_token"] = now
+                self._h_prefill.record(now - t0)
+                self._h_ttft.record(now - req.timeline.get("enqueue", t0))
+                self._g_queue.set(len(self.queue))
 
     def _sample(self, logits, req: Request):
         if req.temperature <= 0:
@@ -172,6 +255,7 @@ class ServeEngine:
         return int(jax.random.categorical(key, logits / req.temperature))
 
     def _retire(self):
+        tele = self._telemetry_on()
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -182,18 +266,36 @@ class ServeEngine:
                 req.done = True
                 self.finished.append(req)
                 self.slot_req[i] = None
+                self._c_retired.inc()
+                if tele:
+                    now = time.perf_counter()
+                    req.timeline["retire"] = now
+                    dur = now - req.timeline.get("prefill_start", now)
+                    if dur > 0 and req.output:
+                        self._h_tps.record(len(req.output) / dur)
+                    obs_trace.instant("retire", uid=req.uid,
+                                      tokens=len(req.output))
 
     # ------------------------------------------------------------ main loop
     def step(self) -> bool:
         """One engine iteration: retire → admit → batched decode."""
         self._retire()
         self._admit()
-        if not any(r is not None for r in self.slot_req):
+        busy = sum(r is not None for r in self.slot_req)
+        if not busy:
             return False
-        logits, self.cache = self._decode_jit(
+        tele = self._telemetry_on()
+        if tele:
+            self._g_slots.set(busy)
+            self._g_queue.set(len(self.queue))
+            t0 = time.perf_counter()
+        run_decode = lambda: self._decode_jit(
             self.params, self.cache, jnp.asarray(self.slot_last),
             jnp.asarray(self.slot_pos))
-        self.stats["decode_steps"] += 1
+        logits, self.cache = (
+            obs_kprof.PROFILER.time_program("decode", run_decode)
+            if tele else run_decode())
+        self._c_decode.inc()
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -201,7 +303,9 @@ class ServeEngine:
             req.output.append(tok)
             self.slot_pos[i] += 1
             self.slot_last[i] = tok
-            self.stats["tokens_out"] += 1
+            self._c_tokens.inc()
+        if tele:
+            self._h_step.record(time.perf_counter() - t0)
         return True
 
     def run(self, max_iters: int = 100_000):

@@ -12,6 +12,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from ..obs import trace as obs_trace
 from .grad_compress import CompressorConfig, compressor_init, \
     log_compress_gradients
 from .optimizer import OptimizerConfig, clip_by_global_norm, make_optimizer
@@ -97,28 +98,58 @@ def make_train_step(loss_fn: Callable, cfg: TrainConfig):
 def train(loss_fn, params, loader, cfg: TrainConfig, *, num_steps: int,
           start_step: int = 0, state: TrainState | None = None,
           hooks: list[Callable] | None = None, jit: bool = True,
-          donate: bool = True):
+          donate: bool = True, metrics: Any = None, monitor: Any = None,
+          host: str = "host0"):
     """Run `num_steps` steps.  Returns (state, history).
 
     hooks: callables (step:int, state, metrics:dict) -> None, run on host
     every cfg.log_every steps (checkpointing, straggler heartbeats, …).
+
+    Telemetry: `metrics` (an `obs.metrics.MetricsRegistry`) gets a
+    ``train_step_s`` histogram, and `monitor` (a
+    `runtime.monitor.HeartbeatMonitor`) gets a ``record(host, step, dt)``
+    heartbeat — both fed from the **same per-step wall-time event**, so
+    fleet-health straggler detection and the step-time percentiles can
+    never disagree about what was measured.  Measuring a truthful per-step
+    time requires a `block_until_ready` sync per step, so it only happens
+    when a consumer (metrics/monitor/active tracer) is attached.
     """
     state = state if state is not None else init_train_state(params, cfg)
     step_fn = make_train_step(loss_fn, cfg)
     if jit:
         step_fn = jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+    step_hist = (metrics.histogram("train_step_s")
+                 if metrics is not None else None)
+
+    def emit_step(step, dt_s, t0_ns, dur_ns):
+        # the single step-event source feeding every telemetry consumer
+        if step_hist is not None:
+            step_hist.record(dt_s)
+        if monitor is not None:
+            monitor.record(host, step, dt_s)
+        obs_trace.add_complete("train_step", t0_ns, dur_ns, step=step)
+
     history = []
     t0 = time.perf_counter()
     for step in range(start_step, start_step + num_steps):
         batch = loader.batch(step) if hasattr(loader, "batch") \
             else next(loader)
-        state, metrics = step_fn(state, batch)
+        timed = (step_hist is not None or monitor is not None
+                 or obs_trace.enabled())
+        if timed:
+            ts0 = time.perf_counter_ns()
+            state, step_metrics = step_fn(state, batch)
+            jax.block_until_ready(step_metrics)
+            dur = time.perf_counter_ns() - ts0
+            emit_step(step, dur / 1e9, ts0, dur)
+        else:
+            state, step_metrics = step_fn(state, batch)
         if cfg.log_every and (step % cfg.log_every == 0
                               or step == start_step + num_steps - 1):
-            metrics = {k: float(v) for k, v in metrics.items()}
-            metrics["step"] = step
-            metrics["wall_s"] = time.perf_counter() - t0
-            history.append(metrics)
+            step_metrics = {k: float(v) for k, v in step_metrics.items()}
+            step_metrics["step"] = step
+            step_metrics["wall_s"] = time.perf_counter() - t0
+            history.append(step_metrics)
             for h in (hooks or []):
-                h(step, state, metrics)
+                h(step, state, step_metrics)
     return state, history

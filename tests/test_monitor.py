@@ -1,0 +1,67 @@
+"""Dedicated fleet-health coverage: restart-budget window arithmetic,
+min-hosts boundary, elastic scale-up, straggler exclusion on restart."""
+
+from repro.runtime.monitor import (HeartbeatMonitor, RestartPolicy,
+                                   StragglerReport)
+
+
+def _report(missing=(), stragglers=None, step=0):
+    return StragglerReport(step=step, median_s=1.0, threshold_s=2.0,
+                           stragglers=dict(stragglers or {}),
+                           missing=list(missing))
+
+
+def test_budget_window_expiry_is_sliding_not_reset():
+    """Old restarts fall out of the window individually — one expiring
+    frees exactly one budget slot, not the whole budget."""
+    clk = [0.0]
+    pol = RestartPolicy(budget=2, budget_window_s=100.0,
+                        clock=lambda: clk[0])
+    assert pol.decide(_report(["h1"]), 16)["action"] == "restart"   # t=0
+    clk[0] = 50.0
+    assert pol.decide(_report(["h2"]), 16)["action"] == "restart"   # t=50
+    clk[0] = 90.0
+    assert pol.decide(_report(["h3"]), 16)["action"] == "abort"
+    clk[0] = 101.0        # t=0 restart expired; t=50 one still counted
+    assert pol.decide(_report(["h4"]), 16)["action"] == "restart"
+    clk[0] = 102.0        # window holds t=50 and t=101 → budget full again
+    assert pol.decide(_report(["h5"]), 16)["action"] == "abort"
+
+
+def test_min_hosts_fraction_exact_boundary():
+    """healthy == fraction·total is still viable (abort only strictly
+    below); one more loss tips it over."""
+    pol = RestartPolicy(min_hosts_fraction=0.5, budget=10)
+    at_boundary = _report([f"h{i}" for i in range(8)])      # 8/16 left
+    assert pol.decide(at_boundary, 16)["action"] == "restart"
+    below = _report([f"h{i}" for i in range(9)])            # 7/16 left
+    assert pol.decide(below, 16)["action"] == "abort"
+
+
+def test_restart_merges_stragglers_into_exclude():
+    """A restart must shed the stragglers seen in the same report, or the
+    reshard lands right back on the slow hosts."""
+    pol = RestartPolicy()
+    out = pol.decide(_report(missing=["h1"], stragglers={"h2": 9.0}), 16)
+    assert out["action"] == "restart"
+    assert out["exclude"] == ["h1", "h2"]
+    assert out["new_world"] == 15        # stragglers excluded, not "lost"
+
+
+def test_restart_exclude_deduplicates_overlap():
+    pol = RestartPolicy()
+    out = pol.decide(_report(missing=["h3"], stragglers={"h3": 9.0}), 16)
+    assert out["exclude"] == ["h3"]
+
+
+def test_elastic_scale_up_host_joins_report():
+    mon = HeartbeatMonitor(["a", "b"], miss_timeout_s=10.0)
+    for step in range(3):
+        mon.record("a", step, 1.0)
+        mon.record("b", step, 1.0)
+    mon.record("c", 2, 1.0)              # scale-up: never in the ctor list
+    assert "c" in mon.hosts
+    rep = mon.report(step=2)
+    assert not rep.missing               # c is tracked, not "missing"
+    mon.record("c", 3, 9.0)              # and participates in detection
+    assert "c" in mon.report(step=3).stragglers

@@ -108,6 +108,27 @@ def test_engine_max_len_stops_generation():
     assert len(done[0].output) <= 10 - 3 + 1
 
 
+def test_engine_rejects_nonpositive_max_new_tokens():
+    cfg, params = _make("gemma-2b")
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=1, max_prompt=8,
+                                                max_len=16))
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        eng.submit(Request(uid=0, prompt=np.array([1, 2], np.int32),
+                           max_new_tokens=0))
+    assert not eng.queue                 # rejected request never queued
+
+
+def test_engine_queue_admits_fifo():
+    cfg, params = _make("gemma-2b")
+    eng = ServeEngine(cfg, params, EngineConfig(max_batch=1, max_prompt=8,
+                                                max_len=32))
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=np.array([1 + uid, 2], np.int32),
+                           max_new_tokens=2))
+    done = eng.run()
+    assert [r.uid for r in done] == [0, 1, 2]
+
+
 def test_engine_temperature_sampling_deterministic_per_seed():
     cfg, params = _make("gemma-2b")
 
