@@ -41,11 +41,12 @@ import jax
 from repro.core.logquant import LogQuantConfig
 from repro.obs import metrics as _obs_metrics
 from .flash_attention import flash_attention_pallas
-from .log_conv2d import (fused_conv_geometry, log_conv2d_fused_pallas,
-                         normalize_padding)
+from .log_conv2d import (fused_conv_geometry, lane_pack_geometry,
+                         log_conv2d_fused_pallas, normalize_padding)
 
+# v3: conv config space gained `lane_pack` (grouped-conv lane packing);
 # v2: op-namespaced keys (conv2d|… / attention|…), one table for all ops
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 # VMEM high-water mark a candidate launch may plan for (double-buffered)
 VMEM_BUDGET_BYTES = 8 << 20
@@ -140,23 +141,29 @@ def estimate_vmem_bytes(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
                             padding=padding, groups=groups, **config)
     slab = g["bt"] * g["rows_in"] * g["Wp"] * g["bcin"] * 4
     wblk = g["bcin"] * g["bcout"]
-    acc = g["bt"] * g["rt"] * g["Wo"] * g["bcout"] * 4
-    return 2 * (slab + wblk) + 2 * acc
+    acc = g["bt"] * g["rt"] * g["Wo"] * g["ow"] * 4
+    # lane packing expands the decoded weight block to [Lc, bcout*g_b] f32
+    # in VMEM before the dot (compact codes stay int8 in the stream)
+    wexp = g["bcin"] * g["ow"] * 4 if g["g_b"] > 1 else 0
+    return 2 * (slab + wblk) + 2 * acc + wexp
 
 
 def default_config(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
                    groups=1) -> dict:
     """Heuristic used on a tuning-table miss: MXU-sized channel blocks, one
-    row tile (zero halo duplication), batch tile as wide as VMEM allows."""
+    row tile (zero halo duplication), batch tile as wide as VMEM allows,
+    lane packing on auto (engages whenever g_b ≥ 2 groups fit a lane block)."""
     return dict(block_cin=128, block_cout=128, rows_per_tile=None,
-                batch_per_tile=None)
+                batch_per_tile=None, lane_pack=None)
 
 
 def candidate_configs(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
                       groups=1, budget: int = VMEM_BUDGET_BYTES,
                       max_candidates: int = 12) -> list[dict]:
-    """Candidate (block_cin, block_cout, rows_per_tile, batch_per_tile)
-    tuples that fit the VMEM budget, deduped after geometry clamping."""
+    """Candidate (block_cin, block_cout, rows_per_tile, batch_per_tile,
+    lane_pack) tuples that fit the VMEM budget, deduped after geometry
+    clamping.  For grouped shapes where lane packing can engage, each
+    tiling is tried both packed (auto g_b) and unpacked (lane_pack=1)."""
     g0 = fused_conv_geometry(B, H, W, C, K, Cout, stride=stride,
                              padding=padding, groups=groups)
     Ho, cin_g, cout_g = g0["Ho"], g0["cin_g"], g0["cout_g"]
@@ -164,25 +171,33 @@ def candidate_configs(B, H, W, C, K, Cout, *, stride=1, padding="SAME",
     bcis = sorted({min(cin_g, 32), min(cin_g, 128), min(cin_g, 256)})
     bcos = sorted({min(cout_g, 32), min(cout_g, 128), min(cout_g, 256)})
     bts = [1, None]  # single batch element vs widest-fit batch tile
+    packable = lane_pack_geometry(groups, cin_g)["g_b"] > 1
+    lps = [None, 1] if packable else [None]  # auto-packed vs forced-off
     seen, out = set(), []
     for rt in rts:
         for bci in bcis:
             for bco in bcos:
                 for bt in bts:
-                    cfg = dict(block_cin=bci, block_cout=bco,
-                               rows_per_tile=rt, batch_per_tile=bt)
-                    g = fused_conv_geometry(B, H, W, C, K, Cout,
-                                            stride=stride, padding=padding,
-                                            groups=groups, **cfg)
-                    sig = (g["bcin"], g["bcout"], g["rt"], g["bt"])
-                    if sig in seen:
-                        continue
-                    if estimate_vmem_bytes(B, H, W, C, K, Cout,
-                                           stride=stride, padding=padding,
-                                           groups=groups, **cfg) > budget:
-                        continue
-                    seen.add(sig)
-                    out.append(cfg)
+                    for lp in lps:
+                        cfg = dict(block_cin=bci, block_cout=bco,
+                                   rows_per_tile=rt, batch_per_tile=bt,
+                                   lane_pack=lp)
+                        g = fused_conv_geometry(B, H, W, C, K, Cout,
+                                                stride=stride,
+                                                padding=padding,
+                                                groups=groups, **cfg)
+                        sig = (g["bcin"], g["bcout"], g["rt"], g["bt"],
+                               g["g_b"])
+                        if sig in seen:
+                            continue
+                        if estimate_vmem_bytes(B, H, W, C, K, Cout,
+                                               stride=stride,
+                                               padding=padding,
+                                               groups=groups,
+                                               **cfg) > budget:
+                            continue
+                        seen.add(sig)
+                        out.append(cfg)
     # prefer fewer, larger tiles first so the search front-loads likely wins
     out.sort(key=lambda c: (-(c["rows_per_tile"] or Ho),
                             -c["block_cout"], -c["block_cin"]))

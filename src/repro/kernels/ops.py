@@ -39,9 +39,9 @@ from repro.obs import kernel_profile as _kprof
 from . import autotune as _autotune
 from . import ref as _ref
 from .flash_attention import attention_traffic_bytes, flash_attention_pallas
-from .log_conv2d import (conv_traffic_bytes, log_conv2d_blockwise,
-                         log_conv2d_fused_pallas, log_conv2d_pallas,
-                         log_conv2d_ref)
+from .log_conv2d import (conv_traffic_bytes, lane_unpack_codes,
+                         log_conv2d_blockwise, log_conv2d_fused_pallas,
+                         log_conv2d_pallas, log_conv2d_ref)
 from .log_matmul import log_matmul_pallas
 from .wkv6 import wkv6_chunked_jnp, wkv6_pallas
 
@@ -101,11 +101,20 @@ class AttentionConfig:
 @dataclasses.dataclass(frozen=True)
 class ConvConfig:
     """Tiling spec for `conv2d`'s fused kernel; None fields let
-    `log_conv2d_fused_pallas` clamp to the layer geometry."""
+    `log_conv2d_fused_pallas` clamp to the layer geometry.
+
+    ``lane_pack`` controls the grouped-conv lane-packed layout (see
+    `log_conv2d.lane_pack_geometry`): ``None`` auto-packs narrow groups
+    into shared 128-lane blocks, ``1`` forces the padded per-group path,
+    ``n ≥ 2`` packs up to ``n`` groups per block.  Precedence: an
+    explicit value here beats a `QuantizedTensor`'s baked-in
+    ``"lane_packed"`` layout (which is unpacked if they disagree), which
+    beats the autotune table, which beats the auto heuristic."""
     block_cin: int | None = None
     block_cout: int | None = None
     rows_per_tile: int | None = None
     batch_per_tile: int | None = None
+    lane_pack: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,8 +217,12 @@ def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
     if not isinstance(qt, QuantizedTensor):
         qt = quantize_tensor(jnp.asarray(qt), qcfg or LogQuantConfig())
     packed = qt.packed
-    if getattr(qt, "layout", None) == "conv_taps":
+    layout = getattr(qt, "layout", None)
+    lane_meta = None
+    if layout == "conv_taps":
         packed = packed.reshape(qt.shape)  # [taps, cin_g, Cout] → 4-D HWIO
+    elif layout == "lane_packed":
+        lane_meta = tuple(qt.layout_meta)  # (g_b, cin_lane, groups)
     assert packed.ndim == 4, f"conv weights must be [K,K,Cin_g,Cout], " \
         f"got {packed.shape}"
     impl, interp = resolve_impl("conv2d", impl, interpret)
@@ -218,8 +231,25 @@ def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
     kw = dict(stride=stride, padding=padding, groups=groups,
               out_dtype=out_dtype)
     B, H, W, C = x.shape
-    K, Cout = packed.shape[0], packed.shape[-1]
+    hwio = tuple(qt.shape) if lane_meta is not None else packed.shape
+    K, Cout = hwio[0], hwio[-1]
     shape_kw = dict(stride=stride, padding=padding, groups=groups)
+    prepacked = False
+    if lane_meta is not None:
+        # a baked "lane_packed" layout rides straight onto the fused
+        # kernel when it matches this call; any disagreement (different
+        # groups, an explicit conflicting lane_pack, a non-fused impl, or
+        # an autotune sweep) falls back to unpacking the compact codes to
+        # HWIO — always correct, just without the pre-arranged layout.
+        g_b, cin_lane, meta_groups = lane_meta
+        want = (config or {}).get("lane_pack")
+        usable = (impl == "pallas" and meta_groups == groups
+                  and want in (None, g_b) and not autotune)
+        if usable:
+            prepacked = True
+        else:
+            packed = lane_unpack_codes(packed, hwio, meta_groups, g_b,
+                                       cin_lane)
     if impl == "pallas":
         if config is None and autotune:
             config = _autotune.autotune_conv2d(
@@ -230,10 +260,12 @@ def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
                 backend=("interpret" if interp else None))
             config = _autotune.lookup(key) or _autotune.default_config(
                 B, H, W, C, K, Cout, **shape_kw)
-        tuned = config
+        if prepacked:  # the baked layout forces its own lane_pack factor
+            config = dict(config, lane_pack=lane_meta[0])
         call = lambda: log_conv2d_fused_pallas(x, packed, qt.scale, qt.cfg,
-                                               interpret=interp, **kw,
-                                               **tuned)
+                                               interpret=interp,
+                                               prepacked=prepacked, **kw,
+                                               **config)
     elif impl == "pallas_im2col":
         call = lambda: log_conv2d_pallas(x, packed, qt.scale, qt.cfg,
                                          interpret=interp, **kw)

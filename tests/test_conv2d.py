@@ -82,6 +82,134 @@ def test_fused_tiling_configs_agree(config):
                                atol=1e-4 * float(jnp.max(jnp.abs(y_ref)) + 1))
 
 
+# ---------------------------------------------------------------------------
+# lane-packed grouped/depthwise layout
+# ---------------------------------------------------------------------------
+
+LANE_SHAPES = [  # B, H, W, C, K, P, stride, padding, groups
+    (1, 8, 8, 6, 3, 6, 1, "SAME", 6),      # depthwise, multiplier 1
+    (1, 8, 8, 6, 3, 12, 1, "SAME", 6),     # depthwise, Cout = Cin * 2
+    (1, 9, 7, 12, 3, 8, 2, "SAME", 4),     # cin_g=3: no power of 2, 128 % 3 ≠ 0
+    (1, 8, 8, 8, 3, 8, 1, "VALID", 4),     # cin_g=2
+    (2, 8, 8, 16, 5, 8, 2, 2, 4),          # cin_g=4, K=5, int padding
+    (1, 8, 8, 4, 3, 8, 1, ((1, 2), (0, 1)), 4),  # asymmetric pads, depthwise
+]
+
+
+@pytest.mark.parametrize("B,H,W,C,K,P,stride,padding,groups", LANE_SHAPES)
+def test_lane_packed_agrees_with_padded_and_lax(B, H, W, C, K, P, stride,
+                                                padding, groups):
+    """Lane-packed vs forced-padded vs the decode+lax.conv fallback across
+    a stride/padding sweep.  The packed kernel's out-of-group taps are
+    exact zeros, so packed and padded run the same per-group sums — any
+    residual is f32 contraction-order noise, bounded far below the
+    quantization error the `tol` of `test_conv2d_impls_agree` allows."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(B, H, W, C)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, K, C // groups, P)).astype(np.float32))
+    qt = quantize_tensor(w)
+    kw = dict(stride=stride, padding=padding, groups=groups)
+    y_packed = ops.conv2d(x, qt, impl="pallas", interpret=True,
+                          config=dict(lane_pack=None), **kw)
+    y_padded = ops.conv2d(x, qt, impl="pallas", interpret=True,
+                          config=dict(lane_pack=1), **kw)
+    # the packing must actually engage for these narrow-group shapes
+    from repro.kernels.log_conv2d import lane_pack_geometry
+    assert lane_pack_geometry(groups, C // groups)["g_b"] > 1
+    eps = 16 * np.finfo(np.float32).eps * float(jnp.max(jnp.abs(y_padded)) + 1)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_padded),
+                               atol=eps)
+    # vs the lax.conv fallback on the decoded weights (shared quant grid)
+    y_bw = ops.conv2d(x, qt, impl="blockwise", **kw)
+    assert y_packed.shape == y_bw.shape
+    tol = 1e-4 * float(jnp.max(jnp.abs(y_bw)) + 1)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_bw),
+                               atol=tol)
+
+
+def test_lane_pack_codes_roundtrip_exact():
+    """pack → unpack is the identity on the raw int8 codes."""
+    from repro.kernels.log_conv2d import (lane_pack_codes, lane_pack_geometry,
+                                          lane_unpack_codes)
+    rng = np.random.default_rng(6)
+    for C, groups, P, K in ((6, 6, 6, 3), (12, 4, 8, 3), (16, 4, 8, 5)):
+        cin_g = C // groups
+        w = jnp.asarray(rng.normal(size=(K, K, cin_g, P)).astype(np.float32))
+        qt = quantize_tensor(w)
+        lp = lane_pack_geometry(groups, cin_g)
+        codes = lane_pack_codes(qt.packed, groups, lp["g_b"], lp["cin_lane"])
+        assert codes.shape == (lp["n_sb"], K * K,
+                               lp["g_b"] * lp["cin_lane"], P // groups)
+        back = lane_unpack_codes(codes, qt.packed.shape, groups, lp["g_b"],
+                                 lp["cin_lane"])
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(qt.packed))
+
+
+def test_lane_packed_quantized_tensor_serving_path():
+    """`quantize_cnn_params(conv_layout="lane_packed")` bakes depthwise
+    kernels into the superblock layout; `ops.conv2d` rides it prepacked
+    (bit-identical to packing on the fly) and unpacks gracefully when the
+    call disagrees with the baked map."""
+    from repro.serving.quantize import quantize_cnn_params
+    rng = np.random.default_rng(7)
+    C = 12
+    w = jnp.asarray(rng.normal(size=(3, 3, 1, C)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, C)).astype(np.float32))
+    params = {"conv": {"w": w, "b": jnp.zeros(C)}}
+    qp = quantize_cnn_params(params, conv_layout="lane_packed")
+    qt_lp = qp["conv"]["w"]
+    assert qt_lp.layout == "lane_packed"
+    g_b, cin_lane, meta_groups = qt_lp.layout_meta
+    assert meta_groups == C and g_b > 1
+    # dequantize round-trips through the packed layout exactly
+    qt = quantize_tensor(w)
+    np.testing.assert_array_equal(np.asarray(qt_lp.dequantize(jnp.float32)),
+                                  np.asarray(qt.dequantize(jnp.float32)))
+    # prepacked fast path ≡ on-the-fly packing, bit for bit
+    y_fly = ops.conv2d(x, qt, impl="pallas", interpret=True, groups=C)
+    y_pre = ops.conv2d(x, qt_lp, impl="pallas", interpret=True, groups=C)
+    np.testing.assert_array_equal(np.asarray(y_pre), np.asarray(y_fly))
+    # graceful unpack: non-pallas impl and a conflicting explicit lane_pack
+    y_bw = ops.conv2d(x, qt, impl="blockwise", groups=C)
+    np.testing.assert_array_equal(
+        np.asarray(ops.conv2d(x, qt_lp, impl="blockwise", groups=C)),
+        np.asarray(y_bw))
+    y_off = ops.conv2d(x, qt_lp, impl="pallas", interpret=True, groups=C,
+                       config=ops.ConvConfig(lane_pack=1))
+    tol = 1e-4 * float(jnp.max(jnp.abs(y_bw)) + 1)
+    np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_bw), atol=tol)
+    # non-depthwise leaves fall back to conv_taps
+    qp2 = quantize_cnn_params({"c": {"w": jnp.asarray(
+        rng.normal(size=(3, 3, 4, 8)).astype(np.float32))}},
+        conv_layout="lane_packed")
+    assert qp2["c"]["w"].layout == "conv_taps"
+
+
+def test_lane_pack_autotune_candidates_and_traffic():
+    """Grouped shapes tune over both packed and padded variants, and the
+    analytic model shows the recovered density at the 128-lane width."""
+    from repro.kernels import autotune
+    from repro.kernels.log_conv2d import conv_traffic_bytes
+    cands = autotune.candidate_configs(1, 8, 8, 32, 3, 32, groups=32)
+    assert {c.get("lane_pack") for c in cands} >= {None, 1}
+    # dense shapes don't get lane variants (packing can't engage)
+    dense = autotune.candidate_configs(1, 8, 8, 128, 3, 128, groups=1)
+    assert {c.get("lane_pack") for c in dense} == {None}
+    kw = dict(stride=1, padding="SAME", groups=32)
+    packed = conv_traffic_bytes("pallas", 1, 8, 8, 32, 3, 32, lanes=128,
+                                config=dict(lane_pack=None), **kw)
+    padded = conv_traffic_bytes("pallas", 1, 8, 8, 32, 3, 32, lanes=128,
+                                config=dict(lane_pack=1), **kw)
+    assert padded["act_w"] / packed["act_w"] >= 4.0
+    assert packed["lane_density"] > padded["lane_density"]
+    # lanes=1 (pure byte count) is unchanged by packing: same codes moved
+    b_packed = conv_traffic_bytes("pallas", 1, 8, 8, 32, 3, 32, lanes=1,
+                                  config=dict(lane_pack=None), **kw)
+    b_padded = conv_traffic_bytes("pallas", 1, 8, 8, 32, 3, 32, lanes=1,
+                                  config=dict(lane_pack=1), **kw)
+    assert b_packed["w"] == b_padded["w"]
+
+
 def test_conv2d_accepts_unpacked_weights():
     """A plain float kernel is packed on the fly — same result as packing."""
     rng = np.random.default_rng(1)

@@ -1,0 +1,83 @@
+"""Check intra-repo markdown links: every relative link/image target in
+the repo's .md files must exist, and every `#fragment` on an intra-repo
+markdown link must match a heading or explicit anchor in the target.
+
+    python tools/check_md_links.py [root]
+
+Exits non-zero listing every broken reference.  External links
+(http/https/mailto) and bare anchors into the same file's headings are
+checked for the latter only.  No dependencies beyond the stdlib — this
+runs in the CI docs job.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — excluding images handled identically; stop at the
+# first unescaped ')'; ignore code spans by stripping fenced/inline code
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"```.*?```", re.S)
+INLINE_CODE_RE = re.compile(r"`[^`]*`")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _anchors(md_path: pathlib.Path) -> set[str]:
+    """GitHub-style slugs of every heading, plus explicit <a name=…>."""
+    out = set()
+    text = FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for line in text.splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            slug = m.group(1).strip().lower()
+            slug = re.sub(r"[`*]|\[|\]|\(.*?\)", "", slug)
+            slug = re.sub(r"[^\w\- ]", "", slug)
+            out.add(slug.replace(" ", "-"))
+    for m in re.finditer(r"<a\s+(?:name|id)=[\"']([^\"']+)[\"']", text):
+        out.add(m.group(1))
+    return out
+
+
+def check(root: pathlib.Path) -> list[str]:
+    errors = []
+    md_files = [p for p in root.rglob("*.md")
+                if ".git" not in p.parts and "node_modules" not in p.parts]
+    for md in md_files:
+        text = FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+        text = INLINE_CODE_RE.sub("", text)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                continue
+            target, _, frag = target.partition("#")
+            if not target:  # same-file anchor
+                if frag and frag not in _anchors(md):
+                    errors.append(f"{md.relative_to(root)}: broken anchor "
+                                  f"#{frag}")
+                continue
+            dest = (md.parent / target).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(root)}: missing target "
+                              f"{target}")
+                continue
+            if frag and dest.suffix == ".md" and frag not in _anchors(dest):
+                errors.append(f"{md.relative_to(root)}: {target}#{frag} — "
+                              f"no such anchor in target")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    errors = check(root)
+    for e in errors:
+        print(f"BROKEN: {e}", file=sys.stderr)
+    n = len(list(root.rglob("*.md")))
+    print(f"checked {n} markdown files under {root}: "
+          f"{len(errors)} broken reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
