@@ -23,21 +23,33 @@ A second table covers the lane-packed grouped/depthwise layout
 (MobileNet-style ``cin_g ∈ {1, 2, 4}``): analytic bytes at the physical
 128-lane width, auto-packed vs forced-padded, gated at ≥4× recovery for
 every narrow-group shape.
+
+A third, ``cold_start``, section gates the autotune warm-start tier: a
+fresh process (empty user cache) tracing quantized inference over all
+four paper CNNs at 224 px must resolve **every** conv dispatch from the
+packaged table — zero tuning sweeps, zero heuristic fallbacks
+(`autotune_lookup` counters: `hit_warm` == dispatches, `miss` == 0).
 """
 
 from __future__ import annotations
 
 import functools
+import os
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.neuromax_cnn import CONFIG as CNN_CONFIG
 from repro.core.accelerator import mobilenet_v1_layers, vgg16_layers
 from repro.core.logquant import quantize_tensor
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 from repro.kernels.log_conv2d import conv_traffic_bytes
+from repro.models import cnn as cnn_models
+from repro.obs import metrics as obs_metrics
+from repro.serving.quantize import quantize_cnn_params
 
 from .common import fmt_table, write_json
 
@@ -90,6 +102,65 @@ def _layer_cases():
     for net, spec in picks:
         groups = spec.C if spec.kind == "dwconv" else 1
         yield net, spec, groups
+
+
+def _autotune_counts() -> dict:
+    """Current `autotune_lookup`/`autotune_sweep` totals (conv2d op)."""
+    out = {"hit_user": 0, "hit_warm": 0, "miss": 0, "sweeps": 0}
+    for name, v in obs_metrics.REGISTRY.snapshot()["counters"].items():
+        if name.startswith("autotune_sweep"):
+            out["sweeps"] += v
+        elif name.startswith("autotune_lookup") and 'op="conv2d"' in name:
+            for r in ("hit_user", "hit_warm", "miss"):
+                if f'result="{r}"' in name:
+                    out[r] += v
+    return out
+
+
+def cold_start_section(img: int = 224, batch: int = 1) -> dict:
+    """First-inference warm-start gate: with an **empty user cache** (the
+    env tier pointed at a file that doesn't exist), shape-trace quantized
+    inference over the four paper CNNs exactly as serving dispatches it
+    (packed `QuantizedTensor` weights, ``conv_impl="pallas"``, lane-packed
+    depthwise layout) and require every conv dispatch to resolve from the
+    packaged warm-start tier.  `jax.eval_shape` runs the real dispatch
+    path — config resolution and table lookups happen at trace time — so
+    the gate covers the full 224 px layer stacks in seconds."""
+    prev = os.environ.get("REPRO_AUTOTUNE_PATH")
+    os.environ["REPRO_AUTOTUNE_PATH"] = os.path.join(
+        tempfile.mkdtemp(prefix="repro-coldstart-"), "empty.json")
+    autotune.reset_cache()
+    per_net, before = {}, _autotune_counts()
+    try:
+        for name in cnn_models.CNN_ZOO:
+            init, apply = cnn_models.CNN_ZOO[name]
+
+            def run_net(key, x, init=init, apply=apply):
+                qp = quantize_cnn_params(init(key), CNN_CONFIG.qcfg,
+                                         conv_layout="lane_packed")
+                return apply(qp, x, conv_impl="pallas")
+
+            n0 = _autotune_counts()
+            jax.eval_shape(run_net, jax.ShapeDtypeStruct((2,), jnp.uint32),
+                           jax.ShapeDtypeStruct((batch, img, img, 3),
+                                                jnp.float32))
+            n1 = _autotune_counts()
+            per_net[name] = {k: n1[k] - n0[k] for k in n0}
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_AUTOTUNE_PATH", None)
+        else:
+            os.environ["REPRO_AUTOTUNE_PATH"] = prev
+        autotune.reset_cache()
+    after = _autotune_counts()
+    d = {k: after[k] - before[k] for k in before}
+    dispatches = d["hit_user"] + d["hit_warm"] + d["miss"]
+    ok = (dispatches > 0 and d["miss"] == 0 and d["sweeps"] == 0
+          and d["hit_warm"] == dispatches)
+    return {"img": img, "batch": batch, "conv_dispatches": dispatches,
+            "hit_warm": d["hit_warm"], "hit_user": d["hit_user"],
+            "miss": d["miss"], "sweeps": d["sweeps"],
+            "per_net": per_net, "ok": ok}
 
 
 def run() -> dict:
@@ -204,6 +275,11 @@ def run() -> dict:
         })
     ok &= lane_ok
 
+    # Cold-start warm-table gate (ROADMAP "autotune table warm-start"):
+    # fresh process ⇒ every conv dispatch of the four CNNs is hit_warm.
+    cold = cold_start_section()
+    ok &= cold["ok"]
+
     cols = ["net", "layer", "shape", "K", "stride", "groups", "fp32_us",
             "logq_blockwise_us", "overhead_x", "rel_quant_err",
             "bytes_im2col", "bytes_fused", "fused_traffic_win_x", "ok"]
@@ -216,9 +292,15 @@ def run() -> dict:
         print(f"{impl}(interpret) probe: compile {p['compile_us']:.0f} µs, "
               f"steady {p['steady_us']:.0f} µs, |Δ vs blockwise| = "
               f"{p['maxdiff']:.2e} ({'OK' if p['maxdiff'] < 1e-3 else 'FAIL'})")
+    print(f"cold_start: {cold['conv_dispatches']} conv dispatches over "
+          f"{list(cold['per_net'])} @ {cold['img']}px — hit_warm "
+          f"{cold['hit_warm']}, hit_user {cold['hit_user']}, miss "
+          f"{cold['miss']}, sweeps {cold['sweeps']} "
+          f"({'OK' if cold['ok'] else 'FAIL'})")
     mean_over = float(np.mean([r["overhead_x"] for r in rows]))
     min_win = min(r["fused_traffic_win_x"] for r in rows if r["K"] == 3)
     out = {"rows": rows, "probes": probes, "lane_rows": lane_rows,
+           "cold_start": cold,
            "pallas_interpret_maxdiff": max(p["maxdiff"]
                                            for p in probes.values()),
            "mean_blockwise_overhead_x": mean_over,

@@ -133,6 +133,17 @@ def _conv_config_dict(config) -> dict | None:
     return dict(config)
 
 
+_CONV_CONFIG_FIELDS = tuple(f.name for f in dataclasses.fields(ConvConfig))
+
+_WARNED_ONCE: set[str] = set()  # one-shot UserWarning dedupe, per process
+
+
+def _warn_once(msg: str) -> None:
+    if msg not in _WARNED_ONCE:
+        _WARNED_ONCE.add(msg)
+        warnings.warn(msg, UserWarning, stacklevel=3)
+
+
 def _itemsize(x) -> int:
     try:
         return jnp.dtype(x.dtype).itemsize
@@ -248,18 +259,38 @@ def conv2d(x, qt, *, stride: int = 1, padding="SAME", groups: int = 1,
         if usable:
             prepacked = True
         else:
+            if (autotune and impl == "pallas" and meta_groups == groups
+                    and want in (None, g_b)):
+                # the sweep still runs, but silently discarding the baked
+                # layout surprises callers expecting the prepacked path
+                _warn_once(
+                    "ops.conv2d: autotune=True unpacked the baked "
+                    "'lane_packed' weight layout for the tuning sweep; the "
+                    "tuned entry applies to the unpacked HWIO path")
             packed = lane_unpack_codes(packed, hwio, meta_groups, g_b,
                                        cin_lane)
     if impl == "pallas":
-        if config is None and autotune:
+        explicit = config or {}
+        if autotune and explicit:
+            _warn_once(
+                f"ops.conv2d: autotune=True is a no-op because config= pins "
+                f"{sorted(explicit)}; drop the explicit config to run the "
+                f"tuning sweep for this shape")
+        if autotune and not explicit:
             config = _autotune.autotune_conv2d(
                 x, packed, qt.scale, qt.cfg, interpret=interp, **shape_kw)
-        if config is None:
+        elif any(f not in explicit for f in _CONV_CONFIG_FIELDS):
+            # the documented contract: fields left unset are filled
+            # per-field from the layered autotune table (or heuristics) —
+            # a partial config (e.g. only lane_pack) keeps the tuned tiling
             key = _autotune.conv_key(
                 B, H, W, C, K, Cout, cfg=qt.cfg, **shape_kw,
                 backend=("interpret" if interp else None))
-            config = _autotune.lookup(key) or _autotune.default_config(
+            tuned = _autotune.lookup(key) or _autotune.default_config(
                 B, H, W, C, K, Cout, **shape_kw)
+            config = {**tuned, **explicit}
+        else:
+            config = explicit
         if prepacked:  # the baked layout forces its own lane_pack factor
             config = dict(config, lane_pack=lane_meta[0])
         call = lambda: log_conv2d_fused_pallas(x, packed, qt.scale, qt.cfg,
@@ -440,6 +471,11 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
         # pallas (GQA-native; dynamic offsets ride the scalar-prefetch
         # operand)
         bq, bk = config.block_q, config.block_k
+        if autotune and bq is not None and bk is not None:
+            _warn_once(
+                "ops.attention: autotune=True is a no-op because config= "
+                "pins both block_q and block_k; leave one unset to run the "
+                "tuning sweep for this shape")
         if bq is None or bk is None:
             if autotune:
                 tuned = _autotune.autotune_attention(

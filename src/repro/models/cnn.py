@@ -24,6 +24,7 @@ dataflow model and the executable model describe the same networks.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -54,6 +55,12 @@ def conv2d(p, x, *, stride=1, pad="SAME", quant=None, qcfg=LOGQ_DEFAULT,
     otherwise it is the fake-quant `lax.conv` QAT path.
     """
     w = p["w"]
+    if _CONV_SHAPE_TRACE is not None:
+        hwio = tuple(w.shape)  # QuantizedTensor.shape is the logical HWIO
+        _CONV_SHAPE_TRACE.append(dict(
+            B=int(x.shape[0]), H=int(x.shape[1]), W=int(x.shape[2]),
+            C=int(x.shape[3]), K=int(hwio[0]), Cout=int(hwio[-1]),
+            stride=int(stride), padding=pad, groups=int(groups)))
     if conv_impl is not None or isinstance(w, QuantizedTensor):
         qt = w if isinstance(w, QuantizedTensor) else quantize_tensor(w, qcfg)
         y = kops.conv2d(x, qt, stride=stride, padding=pad, groups=groups,
@@ -262,6 +269,67 @@ CNNS = {
     "resnet34": (resnet34_init, resnet34_apply),
     "squeezenet": (squeezenet_init, squeezenet_apply),
 }
+
+CNN_ZOO = CNNS  # the paper's four networks — the warm-start tuning target
+
+
+# ---------------------------------------------------------------------------
+# conv-shape walker (feeds the packaged autotune warm-start tier)
+# ---------------------------------------------------------------------------
+
+_CONV_SHAPE_TRACE: list | None = None
+
+
+@contextlib.contextmanager
+def _capture_conv_shapes(records: list):
+    global _CONV_SHAPE_TRACE
+    prev = _CONV_SHAPE_TRACE
+    _CONV_SHAPE_TRACE = records
+    try:
+        yield records
+    finally:
+        _CONV_SHAPE_TRACE = prev
+
+
+def trace_conv_shapes(name: str, *, batch=1, img=224, n_classes=1000, cin=3,
+                      width_mult=1.0) -> list[dict]:
+    """Every conv dispatch of one zoo network, as launch-geometry records
+    ``{B, H, W, C, K, Cout, stride, padding, groups}`` in call order.
+
+    Shape tracing only: `init` runs *inside* `jax.eval_shape` (so python
+    strides in the param tree stay static) and no parameters or
+    activations are ever materialised — walking all four networks at the
+    paper's 224 px takes seconds, not a forward pass."""
+    init, apply = CNNS[name]
+    records: list[dict] = []
+
+    def run(key, x):
+        return apply(init(key, n_classes=n_classes, cin=cin,
+                          width_mult=width_mult), x)
+
+    with _capture_conv_shapes(records):
+        jax.eval_shape(run, jax.ShapeDtypeStruct((2,), jnp.uint32),
+                       jax.ShapeDtypeStruct((batch, img, img, cin),
+                                            jnp.float32))
+    return records
+
+
+def zoo_conv_shapes(*, batch=1, img=224, n_classes=1000, cin=3,
+                    width_mult=1.0) -> list[dict]:
+    """Deduped union of conv launch shapes across the whole zoo — the
+    shape list the packaged autotune tier must cover (each record gains a
+    ``nets`` list naming the networks that dispatch it)."""
+    seen: dict[tuple, dict] = {}
+    for name in CNNS:
+        for r in trace_conv_shapes(name, batch=batch, img=img,
+                                   n_classes=n_classes, cin=cin,
+                                   width_mult=width_mult):
+            sig = tuple(sorted((k, str(v)) for k, v in r.items()))
+            if sig not in seen:
+                seen[sig] = dict(r, nets=[name])
+            elif name not in seen[sig]["nets"]:
+                seen[sig]["nets"].append(name)
+    return list(seen.values())
 
 
 def make_cnn(name: str, key, *, n_classes=1000, cin=3, width_mult=1.0,

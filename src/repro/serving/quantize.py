@@ -112,6 +112,21 @@ def abstract_quantized_params(params_abs, qcfg: LogQuantConfig =
     return jax.eval_shape(lambda p: quantize_params(p, qcfg), params_abs)
 
 
+def abstract_quantized_cnn_params(params_abs, qcfg: LogQuantConfig =
+                                  LogQuantConfig(),
+                                  conv_layout: str | None = None):
+    """ShapeDtypeStruct version of `quantize_cnn_params` — what the packed
+    tree will look like, without materialising weights.  The cold-start
+    benchmark and the autotune warm-start tooling trace quantized CNN
+    dispatch through this path: layouts (``conv_taps``/``lane_packed``)
+    resolve from shapes alone, and `ops.conv2d`'s autotune keys only
+    depend on shapes + `qcfg`, so abstract packing exercises the exact
+    table lookups real serving performs."""
+    return jax.eval_shape(
+        lambda p: quantize_cnn_params(p, qcfg, conv_layout=conv_layout),
+        params_abs)
+
+
 def quantized_fraction(params) -> float:
     """Fraction of parameter bytes now stored as 1-byte codes."""
     import jax.numpy as jnp

@@ -274,10 +274,11 @@ def test_profiler_eager_ops_dispatch_records():
 
 def test_autotune_lookup_hit_miss_counters(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_PATH", str(tmp_path / "tune.json"))
+    monkeypatch.setattr(autotune, "PACKAGED_DIR", str(tmp_path / "pkg"))
     autotune.reset_cache()
     try:
         hit = obs_metrics.REGISTRY.counter("autotune_lookup",
-                                           op="attention", result="hit")
+                                           op="attention", result="hit_user")
         miss = obs_metrics.REGISTRY.counter("autotune_lookup",
                                             op="attention", result="miss")
         h0, m0 = hit.value, miss.value
